@@ -1,0 +1,79 @@
+"""Paper Fig. 3 + Table 4: validation loss w.r.t. steps — TA-MoE vs the
+load-balance baseline must be consistent (TA does not hurt convergence).
+
+Real training on CPU with the reduced paper model; the TA run uses the
+*heterogeneous* 2-pod penalty profile (the worst case for accuracy) even
+though the mesh is a single host device — the loss sees exactly the same
+penalties it would on the production mesh."""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig, get_config
+from repro.core import gating, topology
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as model_lib
+from repro.training import trainer
+
+
+def _val_loss(arch, params, ctx, steps=2, seed=777):
+    from repro import sharding
+    from repro.models import transformer
+    data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size, seq_len=32,
+                                  global_batch=8, seed=seed), arch)
+    rules = model_lib.default_rules(ctx.mesh)
+    tot = 0.0
+    with ctx.mesh, sharding.axis_rules(rules):
+        f = jax.jit(lambda p, b: transformer.loss_fn(p, b, ctx,
+                                                     aux_weight=0.0)[1]["nll"])
+        for i in range(steps):
+            tot += float(f(params, data.batch(i)))
+    return tot / steps
+
+
+def run(steps=60, experts=(4,)):
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rows = []
+    base = get_config("gpt3_medium_moe").reduced()
+    # heterogeneous penalties of the 2-pod production topology
+    tm = topology.tpu_topology(2, 16)
+    ratios = topology.per_level_ratios(tm)
+    sizes = tuple(int(s) for s in tm.topo.level_sizes(0))
+    pen = gating.ta_penalties(tuple(ratios), level_sizes=sizes)
+
+    for n_exp in experts:
+        arch = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, num_experts=n_exp))
+        run_cfg = RunConfig(seq_len=32, global_batch=8, learning_rate=1e-3,
+                            total_steps=steps, warmup_steps=5)
+        curves = {}
+        for mode in ("lb", "ta"):
+            t0 = time.time()
+            res = trainer.train(arch, run_cfg, mesh, steps=steps,
+                                aux_mode=mode, log_every=max(steps // 6, 1),
+                                verbose=False, data_seed=0)
+            # patch heterogeneous penalties into the TA context for val
+            ctx = model_lib.build_ctx(arch, mesh, seq_len=32, global_batch=8,
+                                      aux_mode=mode)
+            if mode == "ta":
+                ctx = dataclasses.replace(
+                    ctx, gate_cfg=dataclasses.replace(
+                        ctx.gate_cfg, penalty_by_level=pen))
+            vl = _val_loss(arch, res.params, ctx)
+            curves[mode] = (res.losses, vl, time.time() - t0)
+        lb, ta = curves["lb"], curves["ta"]
+        gap = abs(ta[1] - lb[1])
+        ppl_lb, ppl_ta = float(np.exp(lb[1])), float(np.exp(ta[1]))
+        print(f"# Fig3 E={n_exp}: val nll lb={lb[1]:.4f} ta={ta[1]:.4f} "
+              f"gap={gap:.4f}  PPL lb={ppl_lb:.2f} ta={ppl_ta:.2f}")
+        print(f"  lb curve: {[round(x, 3) for x in lb[0]]}")
+        print(f"  ta curve: {[round(x, 3) for x in ta[0]]}")
+        rows.append((f"fig3_E{n_exp}_lb", lb[2] / steps * 1e6,
+                     f"val_nll={lb[1]:.4f};ppl={ppl_lb:.2f}"))
+        rows.append((f"fig3_E{n_exp}_ta", ta[2] / steps * 1e6,
+                     f"val_nll={ta[1]:.4f};ppl={ppl_ta:.2f};gap={gap:.4f}"))
+    return rows

@@ -1,0 +1,97 @@
+"""Paper Fig. 4: throughput (tokens/s) and speedup of TA-MoE over the
+even-dispatch baselines (DeepSpeed-MoE / FastMoE style) across expert
+counts and cluster topologies.
+
+Analytical step-time model calibrated with the alpha-beta contention
+simulator (no GPUs in this container):
+
+    t_step = t_compute + n_moe_layers * 2 * t_a2a(dispatch) + t_gradsync
+
+The three clusters of paper Table 2 are modelled: A (8xA100 NVSwitch
+nodes, fast RoCE), B (8xV100, same-switch), C (8xV100, multi-switch with a
+contended slow tier).  TA changes only t_a2a via the dispatch matrix."""
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import comm_model as CM
+from repro.core import topology as T
+
+GPU_FLOPS_EFF = 120e12          # A100-class effective bf16 FLOP/s
+TOKENS_PER_GPU = 6 * 1024       # paper batch 6, seq 1024
+
+
+def _cluster(name: str, n_gpus: int):
+    nodes = max(n_gpus // 8, 1)
+    if name == "A":      # NVSwitch + 100Gb/s RoCE/4 (fast-ish inter)
+        spec = tuple([8] * nodes) if nodes > 1 else 8
+        beta = (1 / 800e9, 1 / 300e9, 1 / 25e9)
+        alpha = (0.0, 2e-6, 1e-5)
+    elif name == "B":    # NVLink + same-switch RoCE/8
+        spec = tuple([8] * nodes) if nodes > 1 else 8
+        beta = (1 / 800e9, 1 / 150e9, 1 / 12.5e9)
+        alpha = (0.0, 3e-6, 1.5e-5)
+    else:                # C: cross-switch, contended slow tier
+        half = max(nodes // 2, 1)
+        if nodes > 1:
+            spec = (tuple([8] * half), tuple([8] * (nodes - half))) \
+                if nodes - half > 0 else tuple([8] * half)
+        else:
+            spec = 8
+        beta = (1 / 800e9, 1 / 150e9, 1 / 12.5e9, 1 / 4e9)
+        alpha = (0.0, 3e-6, 1.5e-5, 5e-5)
+    topo = T.TreeTopology(spec)
+    L = topo.num_levels
+    return T.CommModel(topo=topo, alpha=alpha[:L], beta=beta[:L])
+
+
+def _t_a2a(model, mode: str, bytes_per_rank: float):
+    P = model.topo.num_devices
+    if mode == "even":
+        c = CM.dispatch_matrix_from_ratios(model, 1.0, bytes_per_rank,
+                                           mode="even")
+    elif mode == "ta":
+        c_hat = T.target_dispatch(model, tokens_sent=1.0)
+        c = CM.dispatch_matrix_from_ratios(model, 1.0, bytes_per_rank,
+                                           mode="ta", c_hat=c_hat)
+    else:  # hir: compulsory 4:1 intra:inter, renormalized
+        lm = model.topo.level_matrix()
+        w = np.where(lm <= 1, 4.0, 1.0)
+        w = w / w.sum(1, keepdims=True)
+        c = w * bytes_per_rank
+    return CM.simulate_exchange(model, c).contention
+
+
+def run(expert_counts=(8, 16, 32, 64)):
+    arch = get_config("gpt3_medium_moe")
+    d, ff = arch.d_model, arch.moe.d_ff_expert
+    n_moe = arch.num_layers // arch.moe.moe_period
+    rows = []
+    print("# Fig4: simulated throughput (tokens/s) and TA speedup")
+    print(f"{'cluster':8s}{'E':>4s}{'even tok/s':>14s}{'ta tok/s':>12s}"
+          f"{'speedup':>9s}{'hir tok/s':>12s}")
+    for cl in ("A", "B", "C"):
+        for E in expert_counts:
+            P = E                           # one expert per GPU (paper)
+            model = _cluster(cl, P)
+            tokens = TOKENS_PER_GPU * P
+            # active params per token: attn + top2 experts + embeds share
+            act = (arch.num_layers * (4 * d * d)
+                   + n_moe * arch.moe.top_k * 3 * d * ff
+                   + (arch.num_layers - n_moe) * 3 * d * arch.d_ff)
+            t_comp = 6 * act * TOKENS_PER_GPU / GPU_FLOPS_EFF
+            bytes_rank = TOKENS_PER_GPU * arch.moe.top_k * d * 2
+            grad_bytes = 2 * (act * 3) * 2 / P  # rough ring allreduce term
+            t_grad = grad_bytes / 12.5e9
+            out = {}
+            for mode in ("even", "ta", "hir"):
+                t_a2a = _t_a2a(model, mode, bytes_rank)
+                t = t_comp + n_moe * 2 * t_a2a + t_grad
+                out[mode] = tokens / t
+            sp = out["ta"] / out["even"]
+            print(f"{cl:8s}{E:4d}{out['even']:14.0f}{out['ta']:12.0f}"
+                  f"{sp:9.2f}{out['hir']:12.0f}")
+            rows.append((f"fig4_{cl}_E{E}", 1e6 * tokens / out["even"],
+                         f"ta_speedup={sp:.3f};hir_vs_even="
+                         f"{out['hir']/out['even']:.3f}"))
+    return rows

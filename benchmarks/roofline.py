@@ -1,0 +1,47 @@
+"""Roofline table from dry-run records (EXPERIMENTS.md §Roofline source).
+
+Reads the JSONL written by ``python -m repro.launch.dryrun --out ...`` and
+prints the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck.  Falls back to a no-op row when no records exist yet."""
+
+import json
+import os
+
+RECORDS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+
+def load(path=RECORDS):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r.get("aux_mode", "ta"))
+            recs[key] = r      # keep the latest record per combination
+    return list(recs.values())
+
+
+def run():
+    recs = [r for r in load() if r.get("status") == "ok"]
+    rows = []
+    if not recs:
+        print("# roofline: no dry-run records yet "
+              "(run: python -m repro.launch.dryrun --all --out "
+              "results/dryrun.jsonl)")
+        return [("roofline_pending", 0.0, "no_records")]
+    print("# Roofline terms (ms) per arch x shape x mesh")
+    print(f"{'arch':22s}{'shape':12s}{'mesh':6s}{'t_comp':>9s}{'t_mem':>9s}"
+          f"{'t_coll':>9s} {'dominant':10s}{'useful':>7s}")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        print(f"{r['arch']:22s}{r['shape']:12s}{r['mesh']:6s}"
+              f"{r['t_compute']*1e3:9.2f}{r['t_memory']*1e3:9.2f}"
+              f"{r['t_collective']*1e3:9.2f} {r['dominant']:10s}"
+              f"{r['useful_ratio']:7.3f}")
+        rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                     max(r["t_compute"], r["t_memory"],
+                         r["t_collective"]) * 1e6,
+                     f"dominant={r['dominant']};useful="
+                     f"{r['useful_ratio']:.3f}"))
+    return rows

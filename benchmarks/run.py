@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only table1 fig4
+    PYTHONPATH=src python -m benchmarks.run --quick    # smaller trainings
+"""
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_dispatch, fig3_convergence,
+                            fig4_throughput, fig5_fastermoe, fig6_dispatch,
+                            roofline, table1_comm)
+
+    suites = {
+        "table1": lambda: table1_comm.run(),
+        "fig4": lambda: fig4_throughput.run(),
+        "fig6": lambda: fig6_dispatch.run(),
+        "fig3": lambda: fig3_convergence.run(steps=30 if args.quick else 60, experts=(4,) if args.quick else (4, 8)),
+        "fig5": lambda: fig5_fastermoe.run(steps=30 if args.quick else 60),
+        "roofline": lambda: roofline.run(),
+        "ablation": lambda: ablation_dispatch.run(),
+    }
+    sel = args.only or list(suites)
+    rows = []
+    for name in sel:
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.time()
+        try:
+            rows.extend(suites[name]())
+        except Exception as e:  # keep the harness running
+            import traceback
+            traceback.print_exc(limit=6)
+            rows.append((f"{name}_FAILED", 0.0, f"{type(e).__name__}"))
+        print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""§Perf hillclimb driver: for each of the three chosen pairs, lower the
+even baseline, the paper-faithful TA configuration, and each beyond-paper
+iteration, recording the roofline terms per run (EXPERIMENTS.md §Perf).
+
+Run AFTER the baseline matrix:
+    PYTHONPATH=src python results/hillclimb.py [pairA|pairB|pairC ...]
+"""
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+OUT = "results/hillclimb.jsonl"
+
+# (name, arch, shape, multi_pod, runs)
+# each run: (tag, aux_mode, ctx_overrides)
+PAIRS = {
+    # worst roofline fraction: t_mem ~6.6x t_comp, 258 GiB/dev
+    "pairA": ("jamba_v0_1_52b", "train_4k", False, [
+        ("even-baseline", "lb", {}),
+        # ta-paper row comes from the baseline matrix
+        ("it1-blockwise-attn", "ta", {"use_blockwise": True}),
+        ("it2-chunked-mamba-scan", "ta", {"use_blockwise": True,
+                                          "mamba_scan_chunk": 512}),
+        ("it3-fused-xent", "ta", {"use_blockwise": True,
+                                  "mamba_scan_chunk": 512,
+                                  "fused_xent": True}),
+        ("it4-chunk128", "ta", {"use_blockwise": True,
+                                "mamba_scan_chunk": 128,
+                                "fused_xent": True}),
+    ]),
+    # most collective-bound: 41.5 s t_coll on pod1
+    "pairB": ("deepseek_v2_236b", "prefill_32k", False, [
+        ("even-baseline", "lb", {}),
+        ("it1-blockwise-mla", "ta", {"use_blockwise": True}),
+        ("it2-cf1.0", "ta", {"use_blockwise": True,
+                             "capacity_factor": 1.0}),
+        ("it3-f8-a2a", "ta", {"use_blockwise": True,
+                              "capacity_factor": 1.0,
+                              "a2a_dtype": "float8_e4m3fn"}),
+    ]),
+    # most representative of the paper: pod-spanning MoE, TA vs even on DCI
+    "pairC": ("deepseek_v2_236b", "train_4k", True, [
+        ("even-baseline", "lb", {}),
+        ("ta-paper", "ta", {}),       # explicit for the A/B comparison
+        ("it1-f8-a2a", "ta", {"a2a_dtype": "float8_e4m3fn"}),
+        ("it2-blockwise+fused", "ta", {"a2a_dtype": "float8_e4m3fn",
+                                       "use_blockwise": True,
+                                       "fused_xent": True}),
+    ]),
+}
+
+
+def main():
+    names = sys.argv[1:] or list(PAIRS)
+    for name in names:
+        arch, shape, multi, runs = PAIRS[name]
+        for tag, aux, overrides in runs:
+            try:
+                rec, _ = dryrun.lower_one(arch, shape, multi, aux_mode=aux,
+                                          ctx_overrides=overrides or None,
+                                          tag=f"{name}:{tag}")
+                print(f"[{name}:{tag}] dom={rec['dominant']} "
+                      f"tC={rec['t_compute']*1e3:.1f} "
+                      f"tM={rec['t_memory']*1e3:.1f} "
+                      f"tX={rec['t_collective']*1e3:.1f} ms "
+                      f"mem={rec['bytes_per_device']/2**30:.1f}GiB "
+                      f"DCI={rec['dci_bytes_per_chip']/1e6:.0f}MB",
+                      flush=True)
+            except Exception as e:
+                import traceback
+                traceback.print_exc(limit=4)
+                rec = {"tag": f"{name}:{tag}", "status": "fail",
+                       "error": str(e)[:300]}
+            with open(OUT, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

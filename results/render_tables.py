@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL records."""
+
+import json
+import sys
+from collections import OrderedDict
+
+
+def load(path):
+    recs = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"],
+                   r.get("optimized", False))
+            recs[key] = r
+    return recs
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def roofline_table(recs, mesh="pod1", optimized=False):
+    print(f"\n### Roofline — {mesh}"
+          + (" (optimized)" if optimized else " (baseline)"))
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+          "MODEL_FLOPs/HLO | mem/dev GiB |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for (a, s, m, o), r in recs.items():
+        if m != mesh or o != optimized:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | — | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | — | — | — | FAIL | — | — |")
+            continue
+        print(f"| {a} | {s} | {ms(r['t_compute'])} | {ms(r['t_memory'])} | "
+              f"{ms(r['t_collective'])} | {r['dominant']} | "
+              f"{r['useful_ratio']:.3f} | {gib(r['bytes_per_device'])} |")
+
+
+def dryrun_table(recs, mesh="pod2", optimized=False):
+    print(f"\n### Dry-run — {mesh}")
+    print("| arch | shape | params | bytes/dev GiB | GFLOP/chip | "
+          "ICI MB/chip | DCI MB/chip | compile s |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|")
+    for (a, s, m, o), r in recs.items():
+        if m != mesh or o != optimized:
+            continue
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | — | — | — | — | — | "
+                  f"{r.get('note', r.get('error', ''))[:40]} |")
+            continue
+        print(f"| {a} | {s} | {r['n_params']/1e9:.2f}B | "
+              f"{gib(r['bytes_per_device'])} | "
+              f"{r['flops_per_chip']/1e9:.1f} | "
+              f"{r['ici_bytes_per_chip']/1e6:.1f} | "
+              f"{r['dci_bytes_per_chip']/1e6:.1f} | "
+              f"{r['t_compile_s']} |")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1
+                else "results/dryrun_baseline.jsonl")
+    which = sys.argv[2] if len(sys.argv) > 2 else "all"
+    opt = len(sys.argv) > 3 and sys.argv[3] == "opt"
+    if which in ("all", "roofline"):
+        roofline_table(recs, "pod1", opt)
+    if which in ("all", "dryrun"):
+        dryrun_table(recs, "pod1", opt)
+        dryrun_table(recs, "pod2", opt)

@@ -1,0 +1,69 @@
+"""Pytree checkpointing: flat-path .npz with structure manifest.
+
+Deliberately simple and dependency-free (no orbax in the container):
+leaves are saved as numpy arrays keyed by '/'-joined pytree paths; restore
+rebuilds into an existing template (so shardings/dtypes are re-applied by
+the caller via device_put).  Atomic via write-to-temp + rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(path, node):
+        leaves = jax.tree_util.tree_flatten_with_path(node)[0]
+        for kp, leaf in leaves:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in kp)
+            flat[key] = np.asarray(leaf)
+    walk((), tree)
+    return flat
+
+
+def save(path: str, tree, step: int | None = None):
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    meta = {"step": step, "num_leaves": len(flat)}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(path)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for kp, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def latest_step(path: str):
+    meta = path + ".meta.json"
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f).get("step")

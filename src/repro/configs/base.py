@@ -1,0 +1,172 @@
+"""Architecture + run configuration dataclasses and the arch registry.
+
+Each assigned architecture lives in ``configs/<id>.py`` exposing ``CONFIG``.
+``ArchConfig.reduced()`` yields the CPU smoke-test variant (<=2 layers,
+d_model<=512, <=4 experts) of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArch:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    moe_period: int = 1          # MoE FFN every `period` layers (1 = all)
+    first_dense: int = 0         # leading layers keep a dense FFN
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAArch:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    q_lora_rank: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    norm: str = "rmsnorm"         # rmsnorm | nonparam_ln | layernorm
+    activation: str = "swiglu"
+    rope_theta: float = 1e4
+    sliding_window: int = 0       # 0 = full attention
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    moe: Optional[MoEArch] = None
+    mla: Optional[MLAArch] = None
+    # hybrid (jamba): attention mixer at layer i when i % attn_every == attn_offset,
+    # else the SSM mixer.  attn_every=1 -> pure attention.
+    attn_every: int = 1
+    attn_offset: int = 0
+    ssm_kind: str = ""            # "mamba" | "xlstm"
+    slstm_every: int = 0          # xlstm: one sLSTM block per this many
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    # modality frontend stub: embeddings of shape [B, frontend_len, d_model]
+    frontend: Optional[str] = None  # "audio" | "vision"
+    frontend_len: int = 0
+    dtype: str = "bfloat16"
+    source: str = ""              # citation
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (see DESIGN.md input-shape policy)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.mla is not None:
+            return True           # compressed per-token cache, O(L)/step
+        if self.family == "audio":
+            return False          # enc-dec, bounded contexts
+        return True               # dense/vlm: via sliding-window variant
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family/structure, tiny dims."""
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        layers = min(self.num_layers, max(2, self.attn_every))
+        if self.family == "hybrid":       # keep one full mixer group
+            layers = self.attn_every
+        if self.ssm_kind == "xlstm" and self.slstm_every:
+            layers = min(self.num_layers, self.slstm_every)
+        moe = self.moe
+        if moe:
+            moe = dataclasses.replace(
+                moe, num_experts=min(moe.num_experts, 4),
+                top_k=min(moe.top_k, 2),
+                d_ff_expert=min(moe.d_ff_expert, 128),
+                num_shared_experts=min(moe.num_shared_experts, 1),
+                first_dense=min(moe.first_dense, 1))
+        mla = self.mla
+        if mla:
+            mla = dataclasses.replace(mla, kv_lora_rank=64, qk_nope_dim=32,
+                                      qk_rope_dim=16, v_dim=32,
+                                      q_lora_rank=0)
+        return dataclasses.replace(
+            self, name=self.name + "-smoke", num_layers=layers, d_model=d,
+            num_heads=heads, num_kv_heads=kv, head_dim=0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            enc_layers=min(self.enc_layers, 2),
+            frontend_len=min(self.frontend_len, 16) if self.frontend_len else 0,
+            moe=moe, mla=mla, dtype="float32")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Training-run / serving-run hyperparameters."""
+    seq_len: int = 4096
+    global_batch: int = 256
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    aux_weight: float = 1.0       # paper: 1.0
+    aux_mode: str = "ta"          # lb | ta | hir | none
+    seed: int = 0
+    microbatch: int = 0           # 0 = no grad accumulation
+    remat: bool = False
+
+
+ARCH_IDS = (
+    "jamba_v0_1_52b", "internlm2_1_8b", "internvl2_26b", "olmo_1b",
+    "whisper_tiny", "deepseek_v2_lite_16b", "xlstm_350m",
+    "deepseek_v2_236b", "granite_3_2b", "minitron_4b",
+    "gpt3_medium_moe",            # the paper's own model
+)
+
+
+def normalize_arch_id(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{normalize_arch_id(arch_id)}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# The four assigned input shapes (system prompt).
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}

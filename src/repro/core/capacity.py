@@ -1,0 +1,107 @@
+"""Per-level static capacity tables for the hierarchical all-to-all.
+
+TA-MoE's Eq. (7) solution is piecewise-constant per topology level, so the
+paper's DeepSpeed-style local capacities ``C_ie ∝ c_hat_ie`` reduce to one
+integer capacity per (source, destination-level) pair.  These feed the
+equal-split all-to-all stages of core/moe.py with fully static shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import topology as topo_lib
+
+
+def _round_to(x: float, multiple: int) -> int:
+    """Round up to a hardware-friendly multiple (>=1)."""
+    return max(multiple, int(math.ceil(x / multiple)) * multiple)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Static dispatch capacities for one MoE layer on one EP topology.
+
+    ``level_of_stage[s]`` maps all-to-all stage s to a topology level and
+    ``cap_per_stage[s]`` is the per-(source device, expert) token capacity
+    used for that stage.  Even dispatch (the DeepSpeed-MoE / FastMoE
+    baseline) is the same structure with all capacities equal.
+    """
+
+    tokens_per_device: int          # S_local * k assignments emitted
+    num_experts: int                # N (global routed experts)
+    experts_per_rank: int           # E_local on each EP rank
+    cap_near: int                   # per-(src, expert) tokens, intra-pod
+    cap_far: int                    # per-(src, expert) tokens, inter-pod (0 if single level)
+    ratios: tuple                   # per-level multipliers from Eq. (7)
+    mode: str                       # "even" | "ta" | "hir"
+
+    @property
+    def is_hierarchical(self) -> bool:
+        return self.cap_far > 0
+
+
+def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
+              capacity_factor: float, num_pods: int, ep_per_pod: int,
+              mode: str = "ta", hir_ratio: float = 4.0,
+              round_multiple: int = 8) -> CapacityPlan:
+    """Build the per-level capacity plan.
+
+    mode="even": uniform capacity  C = k*S*cf/N         (paper baseline)
+    mode="ta"  : per-level C_l = ratio_l * C            (Eq. 7)
+    mode="hir" : FasterMoE-style compulsory ratio — intra capacity is
+                 ``hir_ratio`` times the inter capacity regardless of beta,
+                 renormalized to preserve total sent volume.
+    """
+    ep_world = num_pods * ep_per_pod
+    experts_per_rank = max(1, math.ceil(num_experts / ep_world))
+    assignments = tokens_per_device * top_k
+    # even per-(src, expert) capacity
+    c_even = assignments * capacity_factor / num_experts
+
+    model = topo_lib.tpu_topology(num_pods, ep_per_pod)
+    ratios = topo_lib.per_level_ratios(model)  # [L]; level 0=self,1=ICI,2=DCI
+
+    if mode == "even":
+        near = far = c_even
+    elif mode == "ta":
+        # level 1 governs intra-pod targets, level 2 inter-pod.  Level 0
+        # (self) is folded into the intra-pod stage: the self chunk never
+        # leaves the device, all_to_all keeps it local.
+        near = c_even * float(ratios[1])
+        far = c_even * float(ratios[2]) if num_pods > 1 else 0.0
+    elif mode == "hir":
+        if num_pods == 1:
+            near, far = c_even, 0.0
+        else:
+            # hard ratio near:far = hir_ratio:1, preserving the total
+            n_near, n_far = ep_per_pod, (num_pods - 1) * ep_per_pod
+            total = c_even * (n_near + n_far)
+            far = total / (n_near * hir_ratio + n_far)
+            near = far * hir_ratio
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    cap_near = _round_to(near, round_multiple)
+    cap_far = _round_to(far, round_multiple) if (num_pods > 1) else 0
+    return CapacityPlan(tokens_per_device=tokens_per_device,
+                        num_experts=num_experts,
+                        experts_per_rank=experts_per_rank,
+                        cap_near=cap_near, cap_far=cap_far,
+                        ratios=tuple(float(r) for r in ratios), mode=mode)
+
+
+def a2a_bytes(plan: CapacityPlan, d_model: int, bytes_per_el: int,
+              num_pods: int, ep_per_pod: int) -> dict:
+    """Bytes each device moves per all-to-all stage (send side), for the
+    roofline collective term and the benchmark comm model."""
+    E = plan.experts_per_rank
+    near = plan.cap_near * E * (ep_per_pod - 1) * d_model * bytes_per_el
+    far = 0
+    if plan.cap_far:
+        far = (plan.cap_far * E * (num_pods - 1) * ep_per_pod
+               * d_model * bytes_per_el)
+    return {"near_bytes": near, "far_bytes": far}

@@ -1,0 +1,75 @@
+"""Link-contention alpha-beta simulator for global MoE exchanges.
+
+Reproduces the paper's communication analysis (Table 1, Fig. 6a): given a
+TreeTopology, per-level link bandwidths, and a dispatch matrix c[i, j]
+(tokens device i sends to device j), estimate the global-exchange time.
+
+Two estimates are produced:
+
+* ``lower_bound`` — the paper's objective, Eq. (2):
+      max_{i,j} (alpha_ij + beta_ij * bytes_ij)
+* ``contention`` — a per-link serialization model: every delivery's bytes
+  are charged to each link on its path; a link's busy time is its total
+  bytes divided by its bandwidth; the exchange takes the busiest link's
+  time plus the max latency.  This captures the inter-switch bottleneck
+  that makes even dispatch slow (paper §3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.topology import CommModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeTime:
+    lower_bound: float
+    contention: float
+    per_level_bytes: dict  # level -> total bytes crossing that level
+
+
+def simulate_exchange(model: CommModel, c_bytes: np.ndarray) -> ExchangeTime:
+    """c_bytes[i, j]: bytes delivered from device i to device j."""
+    topo = model.topo
+    P = topo.num_devices
+    assert c_bytes.shape == (P, P)
+    lm = topo.level_matrix()
+    alpha = np.asarray(model.alpha)[lm]
+    beta = np.asarray(model.beta)[lm]
+
+    lower = float((alpha + beta * c_bytes).max())
+
+    # contention model: bytes at level l cross one level-l "uplink" on each
+    # side; charge a device's send+recv traffic per level against the level's
+    # bandwidth (beta_l).  The busiest (device, level) pair dominates.
+    busiest = 0.0
+    per_level = {}
+    L = topo.num_levels
+    for l in range(1, L):
+        mask = lm == l
+        per_level[l] = float(c_bytes[mask].sum())
+        # per-device traffic that must cross its level-l uplink
+        send = (c_bytes * mask).sum(axis=1)
+        recv = (c_bytes * mask).sum(axis=0)
+        t = (send + recv) * model.beta[l]
+        busiest = max(busiest, float(t.max()))
+    contention = busiest + float(np.asarray(model.alpha).max())
+    return ExchangeTime(lower_bound=lower, contention=contention,
+                        per_level_bytes=per_level)
+
+
+def dispatch_matrix_from_ratios(model: CommModel, tokens_per_device: float,
+                                d_bytes: float,
+                                mode: str = "even",
+                                c_hat: np.ndarray | None = None) -> np.ndarray:
+    """Build c_bytes[i, j] for even dispatch or a supplied c_hat pattern."""
+    P = model.topo.num_devices
+    if mode == "even":
+        c = np.full((P, P), tokens_per_device / P)
+    else:
+        assert c_hat is not None
+        c = c_hat
+    return c * d_bytes

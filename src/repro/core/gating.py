@@ -1,0 +1,129 @@
+"""MoE gates and auxiliary losses: load-balance (Eq. 1), TA-MoE topology loss
+(Eq. 8), and the FasterMoE-style compulsory-ratio baseline.
+
+Everything here is per-shard math designed to run inside ``shard_map`` over
+the expert-parallel mesh axes; callers psum/pmean the returned metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GateConfig:
+    num_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_mode: str = "lb"          # "lb" (Eq 1) | "ta" (Eq 8) | "hir" | "none"
+    aux_weight: float = 1.0       # paper uses 1.0
+    # normalized per-level penalties p (level 0=self, 1=intra-pod, 2=inter-pod),
+    # produced by core.topology.penalty_weights on the level-constant c_hat.
+    penalty_by_level: tuple = (1.0, 1.0, 1.0)
+    # hir: additive logit bias toward intra-pod experts (compulsory preference)
+    hir_bias: float = 2.0
+    router_dtype: jnp.dtype = jnp.float32
+
+
+def init_gate_params(key, d_model: int, cfg: GateConfig):
+    scale = 1.0 / np.sqrt(d_model)
+    return {"w": jax.random.normal(key, (d_model, cfg.num_experts),
+                                   dtype=jnp.float32) * scale}
+
+
+def expert_levels(num_experts: int, experts_per_rank: int, ep_per_pod: int,
+                  num_pods: int, my_pod, my_data) -> jnp.ndarray:
+    """Topology level of each global expert relative to this rank.
+
+    Returns int array [N]: 0 = my own experts, 1 = same pod, 2 = other pod.
+    Expert e lives on EP rank e // experts_per_rank with rank order
+    (pod-major): rank = pod * ep_per_pod + data.
+    """
+    e = jnp.arange(num_experts)
+    rank = e // experts_per_rank
+    pod = rank // ep_per_pod
+    my_rank = my_pod * ep_per_pod + my_data
+    lvl = jnp.where(rank == my_rank, 0, jnp.where(pod == my_pod, 1, 2))
+    return lvl
+
+
+def gate_forward(params, x, cfg: GateConfig, levels: Optional[jnp.ndarray]):
+    """Compute router probabilities and top-k selection.
+
+    x: [T, d] local tokens. Returns dict with probs [T, N], topk_idx [T, k],
+    topk_weight [T, k] (combine weights), logits.
+    """
+    logits = (x.astype(cfg.router_dtype)
+              @ params["w"].astype(cfg.router_dtype))  # [T, N]
+    if cfg.aux_mode == "hir" and levels is not None:
+        # FasterMoE-style compulsory preference: bias the gate toward
+        # low-level (near) experts.  This is the accuracy-damaging hard
+        # mechanism TA-MoE replaces with a loss.
+        logits = logits + jnp.where(levels <= 1, cfg.hir_bias, 0.0)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_weight, topk_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.top_k > 1:
+        # GShard-style renormalization of the selected experts' weights
+        topk_weight = topk_weight / (topk_weight.sum(-1, keepdims=True) + 1e-9)
+    return {"logits": logits, "probs": probs,
+            "topk_idx": topk_idx, "topk_weight": topk_weight}
+
+
+def dispatch_fractions(topk_idx, num_experts: int) -> jnp.ndarray:
+    """c_e / (k*S): fraction of assignments routed to each expert. [N]"""
+    one_hot = jax.nn.one_hot(topk_idx, num_experts,
+                             dtype=jnp.float32)  # [T, k, N]
+    counts = one_hot.sum(axis=(0, 1))  # [N]
+    total = topk_idx.shape[0] * topk_idx.shape[1]
+    return counts / total
+
+
+def aux_loss(gate_out, cfg: GateConfig,
+             levels: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Auxiliary loss for this shard's tokens.
+
+    lb (Eq. 1):  l_aux  = N * sum_e m_e * f_e
+    ta (Eq. 8):  l_topo = N * sum_e p_e * m_e * f_e   with p from the
+                 topology plan (normalized to mean 1, so magnitudes match —
+                 the paper's N*P factor against its un-normalized p).
+    hir:         same as lb (the compulsory mechanism lives in the gate bias
+                 and the capacity plan, mirroring FasterMoE).
+    """
+    if cfg.aux_mode == "none":
+        return jnp.asarray(0.0, jnp.float32)
+    probs = gate_out["probs"]
+    m = probs.mean(axis=0)                                    # m_e  [N]
+    f = dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)  # f_e [N]
+    if cfg.aux_mode == "ta":
+        assert levels is not None, "ta aux loss needs expert levels"
+        pen = jnp.asarray(cfg.penalty_by_level, jnp.float32)[levels]  # [N]
+        return cfg.num_experts * jnp.sum(pen * m * f)
+    return cfg.num_experts * jnp.sum(m * f)
+
+
+def ta_penalties(ratios: tuple, norm: str = "sum",
+                 level_sizes: Optional[tuple] = None) -> tuple:
+    """Per-level penalty weights p_l = Norm(1/c_hat_l) (Eq. 8).
+
+    ``ratios`` are the per-level capacity multipliers from
+    core.topology.per_level_ratios (level-constant c_hat, up to a common
+    factor).  Normalization is the *population* mean over experts — slow
+    levels contain many more experts, so we weight by level sizes when
+    provided.
+    """
+    inv = np.array([1.0 / max(r, 1e-9) for r in ratios], dtype=np.float64)
+    if level_sizes is not None:
+        w = np.asarray(level_sizes, dtype=np.float64)
+        mean = float((inv * w).sum() / max(w.sum(), 1.0))
+    else:
+        mean = float(inv.mean())
+    p = inv / max(mean, 1e-12)
+    if norm == "softmax":
+        e = np.exp(p - p.max())
+        p = e / e.mean() / e.sum() * e.sum()  # keep mean-1 scaling
+    return tuple(float(v) for v in p)

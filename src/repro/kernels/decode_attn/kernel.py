@@ -1,0 +1,102 @@
+"""Pallas decode attention: one query token per request against a long KV
+cache (the decode_32k / long_500k hot loop).
+
+Grid: (B, L/bl) — the cache-length axis is sequential, so the per-request
+accumulator [H, hd], running max m [H] and normalizer l [H] live in the
+revisited output blocks (flash-decoding style online softmax).  The kernel
+is HBM-bandwidth-bound: each KV block is streamed through VMEM exactly
+once, which is the roofline-optimal access pattern for decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *,
+                scale: float, bl: int, G: int, window: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+
+    q = q_ref[0].astype(jnp.float32) * scale         # [H, hd]
+    k = k_ref[0].astype(jnp.float32)                 # [bl, K, hd]
+    v = v_ref[0].astype(jnp.float32)
+    H, hd = q.shape
+    K = k.shape[1]
+    qg = q.reshape(K, G, hd)
+    s = jnp.einsum("kgh,lkh->kgl", qg, k)            # [K, G, bl]
+    s = s.reshape(H, bl)
+
+    n_valid = len_ref[0]                             # current length (scalar)
+    kpos = j * bl + jax.lax.broadcasted_iota(jnp.int32, (H, bl), 1)
+    mask = kpos < n_valid
+    if window:
+        mask &= kpos >= (n_valid - window)
+    s = jnp.where(mask, s, NEG_INF)
+    # rows past the cache end may be block-padding garbage (NaN): zero them
+    # so 0-weight x garbage cannot poison the p@v product below
+    lvalid = (mask[0])[:, None, None]                # [bl, 1, 1]
+    v = jnp.where(lvalid, v, 0.0)
+    s = jnp.where(jnp.isnan(s), NEG_INF, s)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)   # [H, bl]
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0] = alpha * l_prev + jnp.sum(p, axis=1)
+    pg = p.reshape(K, G, bl)
+    o_new = jnp.einsum("kgl,lkh->kgh", pg, v).reshape(H, hd)
+    o_ref[0] = o_ref[0] * alpha[:, None] + o_new
+    m_ref[0] = m_new
+
+
+def decode_attention_pallas(q, k, v, lengths, *, sliding_window: int = 0,
+                            block_l: int = 512, interpret: bool = False):
+    """q: [B, H, hd]; k/v: [B, L, K, hd]; lengths: [B] valid entries.
+
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    bl = min(block_l, L)
+    nl = pl.cdiv(L, bl)
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, bl=bl, G=G,
+                               window=sliding_window)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, nl),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bl, K, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, bl, K, hd), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (out / l[..., None]).astype(q.dtype)

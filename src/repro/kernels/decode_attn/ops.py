@@ -1,0 +1,26 @@
+"""Jitted public wrapper for decode attention."""
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.decode_attn.kernel import decode_attention_pallas
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("sliding_window",))
+def _ref_jit(q, k, v, lengths, sliding_window=0):
+    return decode_attention_ref(q, k, v, lengths,
+                                sliding_window=sliding_window)
+
+
+def decode_attention(q, k, v, lengths, *, sliding_window: int = 0):
+    if jax.default_backend() == "tpu":
+        return decode_attention_pallas(q, k, v, lengths,
+                                       sliding_window=sliding_window)
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return decode_attention_pallas(q, k, v, lengths,
+                                       sliding_window=sliding_window,
+                                       interpret=True)
+    return _ref_jit(q, k, v, lengths, sliding_window)

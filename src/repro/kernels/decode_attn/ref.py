@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for decode attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, lengths, *, sliding_window: int = 0):
+    B, H, hd = q.shape
+    L, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = (q.astype(jnp.float32) / np.sqrt(hd)).reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(L)
+    mask = kpos[None, :] < lengths[:, None]              # [B, L]
+    if sliding_window:
+        mask &= kpos[None, :] >= (lengths[:, None] - sliding_window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

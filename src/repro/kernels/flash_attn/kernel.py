@@ -1,0 +1,107 @@
+"""Pallas flash attention (prefill/train) with causal + sliding-window
+masks and GQA head mapping.
+
+Grid: (B, H, Sq/bq, Sk/bk) — the k axis is last (sequential), so the
+output block, running max m and normalizer l stay VMEM-resident across k
+blocks (online softmax).  Block shapes are MXU-aligned: bq, bk multiples of
+128 where the sequence allows, head_dim is the contraction dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               sk: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        o_ref[0, 0] = jnp.zeros_like(o_ref[0, 0])
+        m_ref[0, 0] = jnp.full_like(m_ref[0, 0], NEG_INF)
+        l_ref[0, 0] = jnp.zeros_like(l_ref[0, 0])
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk                      # ragged final block bound
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    s = jnp.where(jnp.isnan(s), NEG_INF, s)   # padded K rows may be garbage
+    v = jnp.where((kpos[0] < sk)[:, None], v, 0.0)
+
+    m_prev = m_ref[0, 0]                             # [bq]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: exp(NEG_INF - NEG_INF) = 1 — zero them explicitly
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    o_ref[0, 0] = o_ref[0, 0] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           sliding_window: int = 0, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, K, hd] -> [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Sk, bk)
+    scale = 1.0 / np.sqrt(hd)
+
+    qt = q.transpose(0, 2, 1, 3)      # [B, H, Sq, hd]
+    kt = k.transpose(0, 2, 1, 3)      # [B, K, Sk, hd]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                               window=sliding_window, bq=bq, bk=bk, sk=Sk)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    l = jnp.where(l == 0.0, 1.0, l)   # fully-masked query rows
+    out = out / l[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for flash attention."""
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window"))
+def _ref_jit(q, k, v, causal=True, sliding_window=0):
+    return flash_attention_ref(q, k, v, causal=causal,
+                               sliding_window=sliding_window)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sliding_window: int = 0):
+    if jax.default_backend() == "tpu":
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      sliding_window=sliding_window)
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      sliding_window=sliding_window,
+                                      interpret=True)
+    return _ref_jit(q, k, v, causal, sliding_window)

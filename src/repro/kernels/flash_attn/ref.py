@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+
+import jax.numpy as jnp
+
+from repro.models.layers import _sdpa
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        sliding_window: int = 0):
+    Sq, Sk = q.shape[1], k.shape[1]
+    return _sdpa(q, k, v, causal=causal, sliding_window=sliding_window,
+                 q_positions=jnp.arange(Sq), k_positions=jnp.arange(Sk))

@@ -1,0 +1,29 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, interpret-mode
+Pallas under REPRO_KERNEL_INTERPRET=1 (CPU validation), jnp oracle otherwise."""
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.moe_gemm.kernel import grouped_ffn_pallas
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def _ref_jit(x, w_in, w_gate, w_out, activation="swiglu"):
+    return grouped_ffn_ref(x, w_in, w_gate, w_out, activation=activation)
+
+
+def grouped_ffn(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
+    if _backend() == "tpu":
+        return grouped_ffn_pallas(x, w_in, w_gate, w_out,
+                                  activation=activation)
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return grouped_ffn_pallas(x, w_in, w_gate, w_out,
+                                  activation=activation, interpret=True)
+    return _ref_jit(x, w_in, w_gate, w_out, activation)

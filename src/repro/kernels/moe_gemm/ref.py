@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped expert FFN."""
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_in.astype(jnp.float32))
+    if activation == "swiglu" and w_gate is not None:
+        g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                       w_gate.astype(jnp.float32))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype).astype(jnp.float32),
+                   w_out.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,180 @@
+"""Compiled-HLO analysis: collective-byte accounting + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes; collective traffic is NOT in
+cost_analysis, so we parse the post-partitioning HLO text and sum wire
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, classified intra-pod (ICI) vs cross-pod (DCI) from the
+replica groups.  Wire-byte factors use standard ring/all-to-all costs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TARGET hardware constants (TPU v5e-class; DCI assumed — see EXPERIMENTS.md)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (approx. per-chip a2a bw)
+DCI_BW = 6.25e9              # bytes/s per chip, cross-pod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                             r"(?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in a line's result portion."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_groups(line: str, num_devices: int):
+    """Return list of device-id groups for a collective line."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        return [[int(x) for x in g.strip("{}").split(",") if x]
+                for g in re.findall(r"\{[^}]*\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, sz = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(ng, sz)
+        return [list(r) for r in ids]
+    m = _PAIRS_RE.search(line)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+        return [[int(a), int(b)] for a, b in pairs]
+    return [[i for i in range(num_devices)]]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ici_bytes: float = 0.0       # wire bytes per chip over ICI
+    dci_bytes: float = 0.0       # wire bytes per chip over DCI
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, kind, ici, dci):
+        self.ici_bytes += ici
+        self.dci_bytes += dci
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+
+
+def collective_stats(hlo_text: str, *, num_devices: int,
+                     devices_per_pod: int) -> CollectiveStats:
+    """Per-chip wire bytes of all collectives in a compiled HLO module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        # result portion = everything left of the op name; covers both
+        # plain (bf16[...] all-reduce) and tuple ((f32[..], f32[..])
+        # all-reduce) results that XLA's gradient-combiner emits
+        nbytes = _shape_bytes(line[: m.start(1)])
+        if kind.endswith("-done"):
+            continue
+        groups = _parse_groups(line, num_devices)
+        n = max(len(groups[0]), 1)
+        crosses_pod = any(len({d // devices_per_pod for d in g}) > 1
+                          for g in groups)
+        # per-chip wire bytes (ring / pairwise costs)
+        if kind == "all-gather":
+            wire = nbytes * (n - 1) / n          # result is the full buffer
+        elif kind == "reduce-scatter":
+            wire = nbytes * (n - 1)              # result is the shard
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / n
+        elif kind == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:  # collective-permute
+            wire = nbytes
+        if crosses_pod:
+            stats.add(kind, 0.0, wire)
+        else:
+            stats.add(kind, wire, 0.0)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    ici_bytes_per_chip: float
+    dci_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collective_counts: dict
+
+    def table_row(self):
+        return (f"{self.t_compute*1e3:9.3f} {self.t_memory*1e3:9.3f} "
+                f"{self.t_collective*1e3:9.3f} {self.dominant:10s} "
+                f"{self.useful_ratio:6.3f}")
+
+
+def roofline(compiled, *, num_devices: int, devices_per_pod: int,
+             model_flops: float = 0.0, hlo_text: str | None = None
+             ) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    # cost_analysis reports the post-GSPMD per-device module: already per chip
+    flops_per_chip = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cs = collective_stats(text, num_devices=num_devices,
+                          devices_per_pod=devices_per_pod)
+    t_comp = flops_per_chip / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = cs.ici_bytes / ICI_BW + cs.dci_bytes / DCI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    useful = (model_flops / max(flops_per_chip * num_devices, 1.0)
+              if model_flops else 0.0)
+    return Roofline(flops_per_chip=flops_per_chip, hbm_bytes_per_chip=hbm,
+                    ici_bytes_per_chip=cs.ici_bytes,
+                    dci_bytes_per_chip=cs.dci_bytes,
+                    t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+                    dominant=dom, model_flops=model_flops,
+                    useful_ratio=useful, collective_counts=cs.counts)
+
+
+def model_flops_estimate(arch, seq_len: int, global_batch: int,
+                         kind: str, n_params_active: float) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd) with N = active params."""
+    tokens = (global_batch * seq_len if kind in ("train", "prefill")
+              else global_batch)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

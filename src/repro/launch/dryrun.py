@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: the dry-run builds 16x16 and 2x16x16
+# meshes out of placeholder host devices.  Never set this globally.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, print memory/cost analysis, and
+emit the roofline terms.  No real buffers are allocated — all inputs are
+ShapeDtypeStructs (see models/model.input_specs).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b \
+        --shape train_4k --mesh pod1
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models import transformer
+from repro.optim import adamw
+from repro.training import trainer as trainer_lib
+from repro.serving import engine
+from repro.configs.base import RunConfig
+
+
+def arch_variant(arch, shape_name: str):
+    """Shape-specific arch tweaks per DESIGN.md input-shape policy."""
+    if shape_name == "long_500k":
+        if arch.family == "audio":
+            return None, "skip: enc-dec audio (1500-frame encoder, 448-token decoder)"
+        if (arch.family in ("dense", "vlm") and arch.mla is None
+                and arch.sliding_window == 0):
+            arch = dataclasses.replace(arch, sliding_window=8192)
+            return arch, "sliding-window 8192 variant (sub-quadratic policy)"
+    return arch, ""
+
+
+def skip_reason(arch, shape_name: str):
+    sh = INPUT_SHAPES[shape_name]
+    if sh["kind"] == "decode" and arch.family == "audio" \
+            and shape_name == "long_500k":
+        return "enc-dec audio: no 500k decode"
+    return None
+
+
+def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
+              aux_mode: str = "ta", use_remat: bool | None = None,
+              optimized: bool = False, ctx_overrides: dict | None = None,
+              tag: str = ""):
+    """Returns (record, compiled) — record holds all analysis numbers."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arch0 = get_config(arch_id)
+    arch, note = arch_variant(arch0, shape_name)
+    if arch is None:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "pod2" if multi_pod else "pod1",
+                "status": "skipped", "note": note}, None
+    sh = INPUT_SHAPES[shape_name]
+    kind = sh["kind"]
+    B, S = sh["global_batch"], sh["seq_len"]
+    replicated = B < (mesh.shape.get("pod", 1) * mesh.shape["data"])
+    remat = kind == "train" if use_remat is None else use_remat
+
+    ctx = model_lib.build_ctx(arch, mesh, seq_len=S, global_batch=B,
+                              aux_mode=aux_mode if arch.is_moe else "none",
+                              remat=remat, decode_replicated=replicated)
+    if optimized:
+        import dataclasses as _dc
+        ctx = _dc.replace(ctx, use_blockwise=True, fused_xent=True,
+                          a2a_dtype="float8_e4m3fn" if arch.is_moe else "",
+                          mamba_scan_chunk=512, xlstm_chunk=512)
+        if kind == "prefill" and arch.is_moe:
+            # inference prefill needs no drop headroom: cf 1.25 -> 1.0
+            arch_cf1 = _dc.replace(
+                arch, moe=_dc.replace(arch.moe, capacity_factor=1.0))
+            ctx = _dc.replace(
+                ctx, plan=model_lib.make_plan(
+                    arch_cf1, mesh, S, B,
+                    {"lb": "even", "ta": "ta", "hir": "hir"}[aux_mode]))
+    if ctx_overrides:
+        import dataclasses as _dc
+        cfo = dict(ctx_overrides)
+        cf = cfo.pop("capacity_factor", None)
+        ctx = _dc.replace(ctx, **cfo)
+        if cf is not None and arch.is_moe:
+            arch_cf = _dc.replace(
+                arch, moe=_dc.replace(arch.moe, capacity_factor=cf))
+            ctx = _dc.replace(ctx, plan=model_lib.make_plan(
+                arch_cf, mesh, S, B,
+                {"lb": "even", "ta": "ta", "hir": "hir"}[aux_mode]))
+    rules = model_lib.default_rules(mesh)
+    t0 = time.time()
+    with mesh, sharding.axis_rules(rules):
+        aparams = model_lib.abstract_params(jax.random.PRNGKey(0), ctx)
+        n_params = model_lib.count_params(aparams)
+        specs = model_lib.input_specs(arch, shape_name, mesh, ctx=ctx)
+
+        if kind == "train":
+            run = RunConfig(seq_len=S, global_batch=B, aux_mode=aux_mode,
+                            remat=remat)
+            step = trainer_lib.make_train_step(ctx, run)
+            aopt = jax.eval_shape(adamw.init_state, aparams)
+            aopt = jax.tree_util.tree_map(
+                lambda s, p: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype,
+                    sharding=getattr(p, "sharding", None))
+                if s.shape == getattr(p, "shape", None) else
+                jax.ShapeDtypeStruct(s.shape, s.dtype),
+                aopt, {"mu": aparams, "nu": aparams,
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)})
+            lowered = jax.jit(step).lower(aparams, aopt, specs)
+        elif kind == "prefill":
+            fn = engine.make_prefill(ctx)
+            lowered = jax.jit(fn).lower(aparams, specs)
+        else:  # decode
+            fn = engine.make_decode_step(ctx)
+            donate = (1,) if optimized else ()   # in-place cache update
+            lowered = jax.jit(fn, donate_argnums=donate).lower(
+                aparams, specs["cache"], specs["tokens"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        n_dev = mesh.size
+        dpp = n_dev // mesh.shape.get("pod", 1)
+        active = _active_params(arch, n_params)
+        mf = analysis.model_flops_estimate(arch, S, B, kind, active)
+        hlo = compiled.as_text()
+        rl = analysis.roofline(compiled, num_devices=n_dev,
+                               devices_per_pod=dpp, model_flops=mf,
+                               hlo_text=hlo)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "pod2" if multi_pod else "pod1",
+        "status": "ok", "note": note, "kind": kind,
+        "aux_mode": aux_mode, "optimized": optimized, "tag": tag,
+        "ctx_overrides": {k: str(v) for k, v in (ctx_overrides or {}).items()},
+        "n_params": n_params, "active_params": active,
+        "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "flops_per_chip": rl.flops_per_chip,
+        "hbm_bytes_per_chip": rl.hbm_bytes_per_chip,
+        "ici_bytes_per_chip": rl.ici_bytes_per_chip,
+        "dci_bytes_per_chip": rl.dci_bytes_per_chip,
+        "t_compute": rl.t_compute, "t_memory": rl.t_memory,
+        "t_collective": rl.t_collective, "dominant": rl.dominant,
+        "model_flops": mf, "useful_ratio": rl.useful_ratio,
+        "collective_counts": rl.collective_counts,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+    }
+    return rec, compiled
+
+
+def _active_params(arch, n_params: int) -> float:
+    """Active (per-token) parameter count: subtract non-selected experts."""
+    if not arch.is_moe:
+        return float(n_params)
+    m = arch.moe
+    # expert params per MoE layer (swiglu has the extra gate matrix)
+    n_mats = 3 if arch.activation == "swiglu" else 2
+    per_expert = arch.d_model * m.d_ff_expert * n_mats
+    prefix, group, n_groups = transformer.layer_plan(arch)
+    n_moe_layers = sum(1 for s in group if s.ffn == "moe") * n_groups
+    inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    return float(n_params - inactive)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--aux-mode", default="ta", choices=["ta", "lb", "hir"])
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper perf flags (blockwise attn, fused "
+                         "xent, cache donation)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch_id in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = (f"{arch_id} x {shape_name} x "
+                       f"{'pod2' if multi else 'pod1'}")
+                try:
+                    rec, compiled = lower_one(arch_id, shape_name, multi,
+                                              aux_mode=args.aux_mode,
+                                              optimized=args.opt)
+                    if rec["status"] == "ok":
+                        print(f"[ok] {tag}: dom={rec['dominant']} "
+                              f"tC={rec['t_compute']*1e3:.2f}ms "
+                              f"tM={rec['t_memory']*1e3:.2f}ms "
+                              f"tX={rec['t_collective']*1e3:.2f}ms "
+                              f"mem/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                              f"(compile {rec['t_compile_s']}s)", flush=True)
+                    else:
+                        print(f"[skip] {tag}: {rec['note']}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch_id, "shape": shape_name,
+                           "mesh": "pod2" if multi else "pod1",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc(limit=4)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Decode-time forward: one new token against per-layer caches/states.
+
+Cache pytree mirrors the (prefix, groups) layer plan; group caches carry a
+leading n_groups axis and thread through ``lax.scan`` alongside the stacked
+params.  Mixer-family cache kinds:
+
+    attn  -> KV cache [B, L, K, hd]        (L may be sharded: context parallel)
+    mla   -> compressed latent cache [B, L, r] + rope keys
+    mamba -> (h, conv) recurrent state     (O(1) per step)
+    mlstm -> (C, n, m) matrix memory       (O(1) per step)
+    slstm -> (c, n, h, m) scalar memory    (O(1) per step)
+    cross -> precomputed encoder K/V       (static during decode)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers, mamba as mamba_lib, mla as mla_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.transformer import (ModelCtx, SubLayer, _cross_attn,
+                                      _moe_block, layer_plan)
+
+
+def _init_sub_cache(sub: SubLayer, batch: int, max_len: int, ctx: ModelCtx):
+    c = {}
+    if sub.mixer == "attn":
+        c["mixer"] = layers.init_kv_cache(batch, max_len, ctx.attn_cfg)
+    elif sub.mixer == "mla":
+        c["mixer"] = mla_lib.init_mla_cache(batch, max_len, ctx.mla_cfg)
+    elif sub.mixer == "mamba":
+        c["mixer"] = mamba_lib.init_mamba_state(batch, ctx.mamba_cfg)
+    elif sub.mixer == "mlstm":
+        c["mixer"] = xlstm_lib.init_mlstm_state(batch, ctx.xlstm_cfg)
+    elif sub.mixer == "slstm":
+        c["mixer"] = xlstm_lib.init_slstm_state(batch, ctx.xlstm_cfg)
+    if sub.cross:
+        # encoder K/V filled at prefill; zeros here
+        a = ctx.attn_cfg
+        enc_len = ctx.arch.frontend_len or 1
+        c["cross_k"] = jnp.zeros((batch, enc_len, a.num_kv_heads, a.head_dim),
+                                 a.dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, a.num_kv_heads, a.head_dim),
+                                 a.dtype)
+    return c
+
+
+def init_cache(ctx: ModelCtx, batch: int, max_len: int):
+    prefix, group, n_groups = layer_plan(ctx.arch)
+    cache = {}
+    for i, sub in enumerate(prefix):
+        cache[f"prefix{i}"] = _init_sub_cache(sub, batch, max_len, ctx)
+
+    def one(_):
+        return {f"sub{j}": _init_sub_cache(s, batch, max_len, ctx)
+                for j, s in enumerate(group)}
+    cache["groups"] = jax.vmap(one)(jnp.arange(n_groups))
+    return cache
+
+
+def fill_cross_cache(params, cache, enc_out, ctx: ModelCtx):
+    """Project encoder output into every decoder layer's cross K/V cache."""
+    prefix, group, n_groups = layer_plan(ctx.arch)
+    a = ctx.attn_cfg
+    B, F, _ = enc_out.shape
+
+    def kv(p_cross, stacked: bool):
+        eq = "bfd,gdk->gbfk" if stacked else "bfd,dk->bfk"
+        k = jnp.einsum(eq, enc_out, p_cross["wk"])
+        v = jnp.einsum(eq, enc_out, p_cross["wv"])
+        shp = ((n_groups, B, F, a.num_kv_heads, a.head_dim) if stacked
+               else (B, F, a.num_kv_heads, a.head_dim))
+        return k.reshape(shp), v.reshape(shp)
+
+    cache = jax.tree_util.tree_map(lambda x: x, cache)  # shallow copy
+    for i, sub in enumerate(prefix):
+        if sub.cross:
+            k, v = kv(params[f"prefix{i}"]["cross"], stacked=False)
+            cache[f"prefix{i}"]["cross_k"] = k.astype(a.dtype)
+            cache[f"prefix{i}"]["cross_v"] = v.astype(a.dtype)
+    for j, sub in enumerate(group):
+        if sub.cross:
+            k, v = kv(params["groups"][f"sub{j}"]["cross"], stacked=True)
+            cache["groups"][f"sub{j}"]["cross_k"] = k.astype(a.dtype)
+            cache["groups"][f"sub{j}"]["cross_v"] = v.astype(a.dtype)
+    return cache
+
+
+def _decode_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx):
+    a = ctx.arch
+    h = layers.norm_apply(p["norm1"], x, a.norm)
+    if sub.mixer == "attn":
+        mix, c["mixer"] = layers.attn_decode(p["mixer"], h, c["mixer"],
+                                             ctx.attn_cfg)
+    elif sub.mixer == "mla":
+        mix, c["mixer"] = mla_lib.mla_decode(p["mixer"], h, c["mixer"],
+                                             ctx.mla_cfg)
+    elif sub.mixer == "mamba":
+        mix, c["mixer"] = mamba_lib.mamba_decode(p["mixer"], h, c["mixer"],
+                                                 ctx.mamba_cfg)
+    elif sub.mixer == "mlstm":
+        mix, c["mixer"] = xlstm_lib.mlstm_decode(p["mixer"], h, c["mixer"],
+                                                 ctx.xlstm_cfg)
+    elif sub.mixer == "slstm":
+        mix, c["mixer"] = xlstm_lib.slstm_decode(p["mixer"], h, c["mixer"],
+                                                 ctx.xlstm_cfg)
+    x = x + mix
+    if sub.cross:
+        h = layers.norm_apply(p["norm_cross"], x, a.norm)
+        B = x.shape[0]
+        cfg = ctx.attn_cfg
+        q = (h @ p["cross"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        out = layers._sdpa(q, c["cross_k"], c["cross_v"], causal=False,
+                           sliding_window=0, q_positions=jnp.zeros((1,), int),
+                           k_positions=jnp.arange(c["cross_k"].shape[1]))
+        x = x + out.reshape(B, 1, -1) @ p["cross"]["wo"]
+    if sub.ffn == "mlp":
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        x = x + layers.mlp_apply(p["ffn"], h, a.activation)
+    elif sub.ffn == "moe":
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        y, _ = _moe_block(p["ffn"], h, ctx, decode=True)
+        x = x + y
+    return x, c
+
+
+def decode_step(params, cache, tokens, ctx: ModelCtx):
+    """tokens: [B, 1] — returns (logits [B, 1, V], new_cache)."""
+    a = ctx.arch
+    prefix, group, n_groups = layer_plan(a)
+    x = layers.embed_apply(params["embed"], tokens)
+    if not ctx.decode_replicated:
+        x = sharding.constrain(x, "batch", None, None)
+
+    new_cache = {}
+    for i, sub in enumerate(prefix):
+        x, new_cache[f"prefix{i}"] = _decode_sublayer(
+            params[f"prefix{i}"], dict(cache[f"prefix{i}"]), x, sub, ctx)
+
+    def body(x, pc):
+        p, c = pc
+        c = jax.tree_util.tree_map(lambda v: v, c)  # shallow copy
+        for j, sub in enumerate(group):
+            x, c[f"sub{j}"] = _decode_sublayer(p[f"sub{j}"],
+                                               dict(c[f"sub{j}"]), x, sub, ctx)
+        return x, c
+
+    x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                           cache["groups"]))
+    new_cache["groups"] = new_groups
+    x = layers.norm_apply(params["final_norm"], x, a.norm)
+    logits = layers.unembed_apply(params["embed"], x)
+    return logits, new_cache

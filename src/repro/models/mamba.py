@@ -1,0 +1,149 @@
+"""Mamba (S6) selective-state-space block, JAX-native.
+
+Train/prefill run the selective scan with ``jax.lax.associative_scan``
+(parallel over time — the TPU-friendly formulation); decode is the O(1)
+recurrent step on carried state.  Used by the Jamba hybrid architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0           # 0 -> ceil(d_model/16)
+    dtype: jnp.dtype = jnp.bfloat16
+    scan_chunk: int = 0        # >0: chunked scan (EXPERIMENTS.md §Perf.1) —
+                               # bounds the f32 scan state working set to
+                               # O(chunk * d_inner * d_state) instead of O(S·…)
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self):
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba(key, cfg: MambaConfig):
+    ks = jax.random.split(key, 8)
+    d, di, n, rk = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    s = 1.0 / np.sqrt(d)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in": layers._norm_init(ks[0], (d, 2 * di), s).astype(cfg.dtype),
+        "conv_w": (layers._norm_init(ks[1], (cfg.d_conv, di), 1.0)
+                   * (1 / np.sqrt(cfg.d_conv))).astype(cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "w_x_dbc": layers._norm_init(ks[2], (di, rk + 2 * n),
+                                     1 / np.sqrt(di)).astype(cfg.dtype),
+        "w_dt": layers._norm_init(ks[3], (rk, di), 1 / np.sqrt(rk)).astype(cfg.dtype),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),
+        "A_log": jnp.log(A),                       # [di, n] f32
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": layers._norm_init(ks[4], (di, d), 1 / np.sqrt(di)).astype(cfg.dtype),
+    }
+
+
+def _conv_causal(x, w, b, state=None):
+    """Depthwise causal conv. x: [B, S, di]; w: [K, di]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out + b, new_state
+
+
+def _ssm_params(params, xc, cfg: MambaConfig):
+    n, rk = cfg.d_state, cfg.dt_rank_
+    dbc = xc @ params["w_x_dbc"]                       # [B,S,rk+2n]
+    dt = jax.nn.softplus(dbc[..., :rk] @ params["w_dt"]
+                         + params["b_dt"])            # [B,S,di] f32-ish
+    Bm = dbc[..., rk:rk + n].astype(jnp.float32)       # [B,S,n]
+    Cm = dbc[..., rk + n:].astype(jnp.float32)         # [B,S,n]
+    A = -jnp.exp(params["A_log"])                      # [di,n]
+    return dt.astype(jnp.float32), Bm, Cm, A
+
+
+def _combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, br + ar * bl
+
+
+def mamba_apply(params, x, cfg: MambaConfig):
+    """x: [B, S, d] -> [B, S, d] via parallel associative scan.
+
+    With cfg.scan_chunk > 0 the time axis is processed in chunks with a
+    sequential carry: the associative scan (and its O(S) f32 (a, b, h)
+    intermediates) only ever exists for one chunk at a time.
+    """
+    B, S, _ = x.shape
+    xz = x @ params["w_in"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _conv_causal(xc, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm, A = _ssm_params(params, xc, cfg)
+    xf = xc.astype(jnp.float32)
+    # discretize: a_t = exp(dt*A) [B,S,di,n]; b_t = dt*B*x
+    a = jnp.exp(dt[..., None] * A[None, None])
+    b = (dt * xf)[..., None] * Bm[:, :, None, :]
+
+    ck = cfg.scan_chunk
+    if ck and ck < S and S % ck == 0:
+        nc = S // ck
+        ac = a.reshape(B, nc, ck, *a.shape[2:]).transpose(1, 0, 2, 3, 4)
+        bc = b.reshape(B, nc, ck, *b.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+        def chunk_step(h0, ab):
+            ai, bi = ab
+            acc, h = jax.lax.associative_scan(_combine, (ai, bi), axis=1)
+            h = h + acc * h0[:, None]          # inject carry
+            return h[:, -1], h
+        h0 = jnp.zeros((B,) + a.shape[2:], jnp.float32)
+        _, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, *a.shape[2:])
+    else:
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm) + params["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def init_mamba_state(batch: int, cfg: MambaConfig):
+    return {"h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), cfg.dtype)}
+
+
+def mamba_decode(params, x, state, cfg: MambaConfig):
+    """Single-token recurrent step. x: [B, 1, d]."""
+    xz = x @ params["w_in"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv_causal(xc, params["conv_w"], params["conv_b"],
+                                  state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm, A = _ssm_params(params, xc, cfg)
+    xf = xc.astype(jnp.float32)[:, 0]
+    a = jnp.exp(dt[:, 0, :, None] * A[None])           # [B,di,n]
+    b = (dt[:, 0] * xf)[..., None] * Bm[:, 0, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + params["D"] * xf
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["w_out"], {"h": h, "conv": conv_state}

@@ -1,0 +1,252 @@
+"""Top-level model API: context building, parameter init with shardings,
+and ShapeDtypeStruct input specs for the multi-pod dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.configs.base import ArchConfig, RunConfig, INPUT_SHAPES
+from repro.core import capacity, gating, moe as moe_lib, topology
+from repro.models import transformer, decode as decode_lib
+
+
+def default_rules(mesh) -> sharding.AxisRules:
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    return sharding.AxisRules({
+        "batch": batch if len(batch) > 1 else (batch[0] if batch else None),
+        "model": "model" if "model" in names else None,
+        "kv_len": "data" if "data" in names else None,
+        "expert": batch if len(batch) > 1 else (batch[0] if batch else None),
+    }, mesh=mesh)
+
+
+def make_ep_spec(arch: ArchConfig, mesh) -> Optional[moe_lib.EPSpec]:
+    if not arch.is_moe:
+        return None
+    pods = mesh.shape.get("pod", 1)
+    data = mesh.shape.get("data", 1)
+    model = "model" if "model" in mesh.shape else None
+    n = arch.moe.num_experts
+    span = pods > 1 and n % (pods * data) == 0 and n >= pods * data
+    if span:
+        return moe_lib.EPSpec(num_pods=pods, ep_per_pod=data,
+                              pod_axis="pod", data_axis="data",
+                              model_axis=model)
+    return moe_lib.EPSpec(num_pods=1, ep_per_pod=data, pod_axis=None,
+                          data_axis="data", model_axis=model)
+
+
+def make_plan(arch: ArchConfig, mesh, seq_len: int, global_batch: int,
+              mode: str) -> Optional[capacity.CapacityPlan]:
+    if not arch.is_moe:
+        return None
+    ep = make_ep_spec(arch, mesh)
+    pods = mesh.shape.get("pod", 1)
+    data = mesh.shape.get("data", 1)
+    tokens_per_device = max(1, (global_batch * seq_len) // (pods * data))
+    return capacity.make_plan(
+        tokens_per_device=tokens_per_device,
+        num_experts=arch.moe.num_experts, top_k=arch.moe.top_k,
+        capacity_factor=arch.moe.capacity_factor,
+        num_pods=ep.num_pods, ep_per_pod=ep.ep_per_pod, mode=mode)
+
+
+def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
+                  ) -> Optional[gating.GateConfig]:
+    if not arch.is_moe:
+        return None
+    penalties = (1.0, 1.0, 1.0)
+    if aux_mode == "ta" and plan is not None:
+        model = topology.tpu_topology(ep.num_pods, ep.ep_per_pod)
+        sizes = tuple(int(s) for s in model.topo.level_sizes(0))
+        penalties = gating.ta_penalties(plan.ratios, level_sizes=sizes)
+        if len(penalties) < 3:
+            penalties = penalties + (penalties[-1],) * (3 - len(penalties))
+    return gating.GateConfig(
+        num_experts=arch.moe.num_experts, top_k=arch.moe.top_k,
+        capacity_factor=arch.moe.capacity_factor,
+        aux_mode=aux_mode, penalty_by_level=penalties)
+
+
+def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
+              aux_mode: str = "ta", remat: bool = False,
+              decode_replicated: bool = False,
+              use_flash: bool = False,
+              use_moe_kernel: bool = False) -> transformer.ModelCtx:
+    dispatch_mode = {"lb": "even", "even": "even", "ta": "ta",
+                     "hir": "hir", "none": "even"}[aux_mode]
+    plan = make_plan(arch, mesh, seq_len, global_batch, dispatch_mode)
+    ep = make_ep_spec(arch, mesh)
+    gate_cfg = make_gate_cfg(arch, plan, ep, aux_mode)
+    return transformer.ModelCtx(
+        arch=arch, mesh=mesh, ep=ep, plan=plan, gate_cfg=gate_cfg,
+        remat=remat, decode_replicated=decode_replicated,
+        use_flash=use_flash, use_moe_kernel=use_moe_kernel)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (path-regex -> PartitionSpec)
+# ---------------------------------------------------------------------------
+
+
+def param_spec_rules(arch: ArchConfig, ep) -> list:
+    """Ordered (regex, spec) rules for build_param_specs.
+
+    Group-stacked params have a leading layer axis — rules below are written
+    for the *unstacked* layout; `stacked` variants prepend None.
+    """
+    exp = None
+    if ep is not None:
+        exp = (ep.ep_axes() if len(ep.ep_axes()) > 1 else ep.ep_axes()[0])
+    rules = [
+        # embeddings: vocab over model axis
+        (r"embed/table", P("model", None)),
+        # MoE experts
+        (r"ffn/w_in$", P(None, exp, None, "model")),
+        (r"ffn/w_gate$", P(None, exp, None, "model")),
+        (r"ffn/w_out$", P(None, exp, "model", None)),
+        (r"ffn/shared_(in|gate)", P(None, None, "model")),
+        (r"ffn/shared_out", P(None, "model", None)),
+        # attention projections (stacked: leading group axis)
+        (r"mixer/w[qkv]$", P(None, None, "model")),
+        (r"(mixer|cross)/wo$", P(None, "model", None)),
+        (r"cross/w[qkv]$", P(None, None, "model")),
+        # MLA
+        (r"mixer/w_u[kvq]$", P(None, None, "model", None)),
+        (r"mixer/w_q$", P(None, None, "model", None)),
+        # mamba / xlstm / mlp: shard the wide inner dim
+        (r"mixer/w_in$", P(None, None, "model")),
+        (r"mixer/w_up$", P(None, None, "model")),
+        (r"mixer/(w_out|w_down)$", P(None, "model", None)),
+        (r"ffn/w_(in|gate)$", P(None, None, "model")),
+        (r"ffn/w_out$", P(None, "model", None)),
+        (r"proj/w1$", P(None, "model")),
+        (r"proj/w2$", P("model", None)),
+    ]
+    # dense-arch MoE rules never fire; harmless.
+    return rules
+
+
+def init_params(key, ctx: transformer.ModelCtx, rules=None):
+    """Initialize parameters; under a rules context the result is sharded."""
+    params = transformer.init_model(key, ctx)
+    if rules is None:
+        return params
+    specs = sharding.build_param_specs(
+        params, param_spec_rules(ctx.arch, ctx.ep))
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), specs)
+    params = jax.jit(lambda p: p, out_shardings=shardings)(params)
+    return params
+
+
+def param_shardings(params, ctx: transformer.ModelCtx):
+    specs = sharding.build_param_specs(
+        params, param_spec_rules(ctx.arch, ctx.ep))
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), specs)
+
+
+def abstract_params(key, ctx: transformer.ModelCtx):
+    """Shape-only params (no allocation) for the dry-run."""
+    shapes = jax.eval_shape(lambda k: transformer.init_model(k, ctx), key)
+    specs = sharding.build_param_specs(
+        shapes, param_spec_rules(ctx.arch, ctx.ep))
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(ctx.mesh, sp)),
+        shapes, specs)
+
+
+def count_params(params_or_shapes) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params_or_shapes))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(arch: ArchConfig, shape_name: str, mesh,
+                ctx: Optional[transformer.ModelCtx] = None) -> dict:
+    """ShapeDtypeStruct pytree for every model input of this shape."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+    nshard = 1
+    for a in batch_axes:
+        nshard *= mesh.shape[a]
+    replicated = B < nshard            # long_500k: context parallelism
+    bs = P() if replicated else P(bspec)
+
+    def _frontend_spec():
+        if arch.frontend == "vision":
+            from repro.models import vlm
+            shape = vlm.patch_shape(B, arch)
+        else:
+            from repro.models import whisper
+            shape = whisper.frame_shape(B, arch)
+        return _sds(shape, jnp.float32, mesh, P(*bs))
+
+    if kind == "train":
+        specs = {"tokens": _sds((B, S), jnp.int32, mesh, P(*bs)),
+                 "labels": _sds((B, S), jnp.int32, mesh, P(*bs)),
+                 "loss_mask": _sds((B, S), jnp.float32, mesh, P(*bs))}
+        if arch.frontend:
+            specs["frontend"] = _frontend_spec()
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32, mesh, P(*bs))}
+        if arch.frontend:
+            specs["frontend"] = _frontend_spec()
+        return specs
+    # decode: one token + cache
+    assert ctx is not None
+    cache_shapes = jax.eval_shape(
+        lambda: decode_lib.init_cache(ctx, B, S))
+    kv_axis = "data" if (replicated and "data" in mesh.shape) else None
+
+    def cache_spec(path, s):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        leaf = names[-1]
+        lead = [None] * (1 if "groups" in names else 0)  # stacked layer axis
+        batch = None if replicated else bspec
+
+        def model_ok(dim):
+            return "model" in mesh.shape and dim % mesh.shape["model"] == 0
+        if leaf in ("k", "v", "cross_k", "cross_v"):
+            # [(g), B, L, K, hd]
+            return P(*(lead + [batch, kv_axis,
+                               "model" if model_ok(s.shape[-2]) else None,
+                               None]))
+        if leaf in ("c_kv", "k_rope"):
+            # [(g), B, L, r]
+            return P(*(lead + [batch, kv_axis, None]))
+        if leaf == "pos" or replicated:
+            return P(*lead) if lead else P()
+        # recurrent states: [(g), B, ...] — batch-shard
+        rest = s.ndim - len(lead) - 1
+        return P(*(lead + [batch] + [None] * rest))
+
+    cache = jax.tree_util.tree_map_with_path(
+        lambda p, s: _sds(s.shape, s.dtype, mesh, cache_spec(p, s)),
+        cache_shapes)
+    tokens = _sds((B, 1), jnp.int32, mesh, P() if replicated else P(bspec))
+    return {"tokens": tokens, "cache": cache}

@@ -1,0 +1,439 @@
+"""Composable decoder / encoder-decoder assembly over all mixer families.
+
+A model is a (prefix, repeated group) layer plan; the repeated group is
+initialized with ``vmap`` and executed with ``lax.scan`` so the HLO stays
+small at 60-layer scale (critical for multi-pod compile times).  Sublayers:
+
+    mixer: attn (GQA, optional sliding window, optional cross) | mla |
+           mamba | mlstm | slstm
+    ffn  : mlp | moe | None
+
+MoE sublayers enter ``shard_map`` over the expert-parallel axes (see
+core/moe.py); dense compute relies on pjit sharding constraints
+(repro.sharding.constrain).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.core import gating, moe as moe_lib
+from repro.core.capacity import CapacityPlan
+from repro.models import layers, mamba as mamba_lib, mla as mla_lib
+from repro.models import xlstm as xlstm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    mixer: str                    # attn | mla | mamba | mlstm | slstm
+    ffn: Optional[str]            # mlp | moe | None
+    cross: bool = False           # add cross-attention (whisper decoder)
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Everything the forward pass needs besides params and data."""
+    arch: ArchConfig
+    mesh: Optional[object] = None
+    ep: Optional[moe_lib.EPSpec] = None
+    plan: Optional[CapacityPlan] = None          # a2a capacities
+    gate_cfg: Optional[gating.GateConfig] = None
+    use_flash: bool = False
+    use_moe_kernel: bool = False
+    remat: bool = False
+    decode_replicated: bool = False              # long_500k batch=1
+    # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
+    use_blockwise: bool = False                  # flash-style attention HLO
+    fused_xent: bool = False                     # vocab-sharded xent
+    a2a_dtype: str = ""                          # quantized MoE a2a wire
+    mamba_scan_chunk: int = 0                    # chunked selective scan
+    xlstm_chunk: int = 0                         # chunkwise mLSTM
+
+    @property
+    def attn_cfg(self):
+        a = self.arch
+        return layers.AttnConfig(
+            d_model=a.d_model, num_heads=a.num_heads,
+            num_kv_heads=a.num_kv_heads, head_dim=a.head_dim_,
+            rope_theta=a.rope_theta, sliding_window=a.sliding_window,
+            qkv_bias=a.qkv_bias, dtype=a.jnp_dtype,
+            use_flash_kernel=self.use_flash,
+            use_blockwise=self.use_blockwise)
+
+    @property
+    def mla_cfg(self):
+        a = self.arch
+        m = a.mla
+        return mla_lib.MLAConfig(
+            d_model=a.d_model, num_heads=a.num_heads,
+            kv_lora_rank=m.kv_lora_rank, qk_nope_dim=m.qk_nope_dim,
+            qk_rope_dim=m.qk_rope_dim, v_dim=m.v_dim,
+            q_lora_rank=m.q_lora_rank, rope_theta=a.rope_theta,
+            dtype=a.jnp_dtype, use_blockwise=self.use_blockwise)
+
+    @property
+    def mamba_cfg(self):
+        return mamba_lib.MambaConfig(d_model=self.arch.d_model,
+                                     dtype=self.arch.jnp_dtype,
+                                     scan_chunk=self.mamba_scan_chunk)
+
+    @property
+    def xlstm_cfg(self):
+        a = self.arch
+        return xlstm_lib.XLSTMConfig(d_model=a.d_model, num_heads=a.num_heads,
+                                     slstm_every=a.slstm_every or 8,
+                                     dtype=a.jnp_dtype,
+                                     chunk_size=self.xlstm_chunk)
+
+    @property
+    def moe_cfg(self):
+        a = self.arch
+        return moe_lib.MoEConfig(
+            d_model=a.d_model, d_ff=a.moe.d_ff_expert,
+            num_experts=a.moe.num_experts, top_k=a.moe.top_k,
+            capacity_factor=a.moe.capacity_factor,
+            num_shared_experts=a.moe.num_shared_experts,
+            activation=a.activation, dtype=a.jnp_dtype,
+            use_kernel=self.use_moe_kernel, a2a_dtype=self.a2a_dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(arch: ArchConfig):
+    """Returns (prefix: [SubLayer], group: [SubLayer], n_groups)."""
+    if arch.family == "ssm" and arch.ssm_kind == "xlstm":
+        g = arch.slstm_every or 8
+        group = [SubLayer("slstm" if j == g - 1 else "mlstm", None)
+                 for j in range(g)]
+        return [], group, arch.num_layers // g
+
+    if arch.family == "hybrid":           # jamba
+        g = arch.attn_every
+        group = []
+        for j in range(g):
+            mixer = "attn" if j == arch.attn_offset else "mamba"
+            ffn = "moe" if (arch.moe and j % arch.moe.moe_period
+                            == arch.moe.moe_period - 1) else "mlp"
+            group.append(SubLayer(mixer, ffn))
+        return [], group, arch.num_layers // g
+
+    mixer = "mla" if arch.mla else "attn"
+    if arch.is_moe:
+        prefix = [SubLayer(mixer, "mlp")] * arch.moe.first_dense
+        group = [SubLayer(mixer, "moe")]
+        return prefix, group, arch.num_layers - arch.moe.first_dense
+    # dense / vlm / audio decoder
+    cross = arch.family == "audio"
+    group = [SubLayer(mixer, "mlp", cross=cross)]
+    return [], group, arch.num_layers
+
+
+def encoder_plan(arch: ArchConfig):
+    return [SubLayer("attn", "mlp", causal=False)], arch.enc_layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, sub: SubLayer, ctx: ModelCtx):
+    a = ctx.arch
+    ks = jax.random.split(key, 6)
+    p = {"norm1": layers.init_norm(a.norm, a.d_model)}
+    if sub.mixer == "attn":
+        p["mixer"] = layers.init_attn(ks[0], ctx.attn_cfg)
+    elif sub.mixer == "mla":
+        p["mixer"] = mla_lib.init_mla(ks[0], ctx.mla_cfg)
+    elif sub.mixer == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(ks[0], ctx.mamba_cfg)
+    elif sub.mixer == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm(ks[0], ctx.xlstm_cfg)
+    elif sub.mixer == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm(ks[0], ctx.xlstm_cfg)
+    else:
+        raise ValueError(sub.mixer)
+    if sub.cross:
+        p["norm_cross"] = layers.init_norm(a.norm, a.d_model)
+        p["cross"] = layers.init_attn(ks[1], ctx.attn_cfg)
+    if sub.ffn == "mlp":
+        p["norm2"] = layers.init_norm(a.norm, a.d_model)
+        p["ffn"] = layers.init_mlp(ks[2], a.d_model, a.d_ff, a.activation,
+                                   a.jnp_dtype)
+    elif sub.ffn == "moe":
+        p["norm2"] = layers.init_norm(a.norm, a.d_model)
+        p["ffn"] = moe_lib.init_moe_params(ks[2], ctx.moe_cfg, ctx.ep,
+                                           ctx.gate_cfg)
+    return p
+
+
+def _init_group(key, group, ctx: ModelCtx):
+    ks = jax.random.split(key, len(group))
+    return {f"sub{j}": _init_sublayer(ks[j], sub, ctx)
+            for j, sub in enumerate(group)}
+
+
+def init_model(key, ctx: ModelCtx):
+    a = ctx.arch
+    prefix, group, n_groups = layer_plan(a)
+    keys = jax.random.split(key, 8 + len(prefix))
+    params = {"embed": layers.init_embed(keys[0], a.vocab_size, a.d_model,
+                                         a.jnp_dtype),
+              "final_norm": layers.init_norm(a.norm, a.d_model)}
+    for i, sub in enumerate(prefix):
+        params[f"prefix{i}"] = _init_sublayer(keys[8 + i], sub, ctx)
+    gkeys = jax.random.split(keys[1], n_groups)
+    params["groups"] = jax.vmap(lambda k: _init_group(k, group, ctx))(gkeys)
+    if a.frontend == "vision":
+        # 2-layer projector from the (stub) vision encoder width to d_model
+        pk = jax.random.split(keys[2], 2)
+        params["proj"] = {
+            "w1": layers._norm_init(pk[0], (1024, a.d_model),
+                                    1 / np.sqrt(1024)).astype(a.jnp_dtype),
+            "w2": layers._norm_init(pk[1], (a.d_model, a.d_model),
+                                    1 / np.sqrt(a.d_model)).astype(a.jnp_dtype),
+        }
+    if a.enc_layers:
+        esub, n_enc = encoder_plan(a)
+        ekeys = jax.random.split(keys[3], n_enc)
+        params["enc_groups"] = jax.vmap(
+            lambda k: _init_group(k, esub, ctx))(ekeys)
+        params["enc_norm"] = layers.init_norm(a.norm, a.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MoE via shard_map
+# ---------------------------------------------------------------------------
+
+
+def _tree_specs_default(tree, special: dict):
+    from jax.sharding import PartitionSpec as P
+
+    def path_str(path):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+
+    def assign(path, leaf):
+        return special.get(path_str(path), P())
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def _moe_block(p, x, ctx: ModelCtx, decode: bool):
+    """x: [B, S, d] (global view). Returns (y, metrics)."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    ep, cfg, gate_cfg = ctx.ep, ctx.moe_cfg, ctx.gate_cfg
+    mesh = ctx.mesh
+    d = x.shape[-1]
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if mesh is not None and a in mesh.shape)
+    replicated = ctx.decode_replicated
+
+    def body(p_local, x_local):
+        xt = x_local.reshape(-1, d)
+        if decode:
+            y, metrics = moe_lib.moe_apply_gather(
+                p_local, xt, cfg, ep, gate_cfg,
+                tokens_replicated=replicated)
+        else:
+            y, metrics = moe_lib.moe_apply_a2a(
+                p_local, xt, cfg, ep, ctx.plan, gate_cfg)
+        # average metrics over every mesh axis so outputs are replicated
+        for ax in mesh.axis_names:
+            metrics = {k: jax.lax.pmean(v, ax) for k, v in metrics.items()}
+        return y.reshape(x_local.shape), metrics
+
+    pspecs = moe_lib.moe_param_specs(cfg, ep)
+    pspecs = _merge_specs(p, pspecs)
+    x_spec = (P() if replicated
+              else P(batch_axes if len(batch_axes) > 1 else
+                     (batch_axes[0] if batch_axes else None), None, None))
+    fn = shard_map(body, mesh=mesh, in_specs=(pspecs, x_spec),
+                   out_specs=(x_spec, _metric_specs(decode)),
+                   check_vma=False)
+    return fn(p, x)
+
+
+def _metric_specs(decode: bool):
+    from jax.sharding import PartitionSpec as P
+    keys = (["aux_loss"] if decode
+            else ["aux_loss", "frac_near", "frac_far", "dropped"])
+    return {k: P() for k in keys}
+
+
+def _merge_specs(params, partial_specs):
+    """Full spec tree for the MoE params: known names from
+    moe_param_specs, default replicated for the rest (gate, norms)."""
+    from jax.sharding import PartitionSpec as P
+
+    def assign(path, leaf):
+        node = partial_specs
+        for k in path:
+            key = getattr(k, "key", None)
+            if isinstance(node, dict) and key in node:
+                node = node[key]
+            else:
+                return P()
+        return node if isinstance(node, P) else P()
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
+                    aux0=0.0):
+    a = ctx.arch
+    h = layers.norm_apply(p["norm1"], x, a.norm)
+    if sub.mixer == "attn":
+        cfg = ctx.attn_cfg
+        if not sub.causal:
+            cfg = dataclasses.replace(cfg, causal=False)
+        mix, _ = layers.attn_apply(p["mixer"], h, cfg)
+    elif sub.mixer == "mla":
+        mix, _ = mla_lib.mla_apply(p["mixer"], h, ctx.mla_cfg)
+    elif sub.mixer == "mamba":
+        mix = mamba_lib.mamba_apply(p["mixer"], h, ctx.mamba_cfg)
+    elif sub.mixer == "mlstm":
+        mix = xlstm_lib.mlstm_apply(p["mixer"], h, ctx.xlstm_cfg)
+    elif sub.mixer == "slstm":
+        mix, _ = xlstm_lib.slstm_apply(p["mixer"], h, ctx.xlstm_cfg)
+    x = x + mix
+    x = sharding.constrain(x, "batch", None, None)
+    if sub.cross and enc_out is not None:
+        h = layers.norm_apply(p["norm_cross"], x, a.norm)
+        mix = _cross_attn(p["cross"], h, enc_out, ctx)
+        x = x + mix
+    aux = jnp.asarray(aux0, jnp.float32)
+    if sub.ffn == "mlp":
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        x = x + layers.mlp_apply(p["ffn"], h, a.activation)
+    elif sub.ffn == "moe":
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        y, metrics = _moe_block(p["ffn"], h, ctx, decode=False)
+        x = x + y
+        aux = aux + metrics["aux_loss"]
+    x = sharding.constrain(x, "batch", None, None)
+    return x, aux
+
+
+def _cross_attn(p, x, enc_out, ctx: ModelCtx):
+    """Simple full cross-attention (whisper decoder)."""
+    cfg = ctx.attn_cfg
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (enc_out @ p["wk"]).reshape(B, enc_out.shape[1], K, hd)
+    v = (enc_out @ p["wv"]).reshape(B, enc_out.shape[1], K, hd)
+    out = layers._sdpa(q, k, v, causal=False, sliding_window=0,
+                       q_positions=jnp.arange(S),
+                       k_positions=jnp.arange(enc_out.shape[1]))
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def _run_encoder(params, frames, ctx: ModelCtx):
+    esub, n_enc = encoder_plan(ctx.arch)
+
+    def body(x, p):
+        x, _ = _apply_sublayer(p["sub0"], x, esub[0], ctx)
+        return x, None
+    x, _ = jax.lax.scan(body, frames, params["enc_groups"])
+    return layers.norm_apply(params["enc_norm"], x, ctx.arch.norm)
+
+
+def forward_features(params, batch, ctx: ModelCtx):
+    """Full-sequence forward up to the final norm. Returns (x, aux)."""
+    a = ctx.arch
+    prefix, group, n_groups = layer_plan(a)
+
+    x = layers.embed_apply(params["embed"], batch["tokens"])
+    x = sharding.constrain(x, "batch", None, None)
+
+    enc_out = None
+    if a.family == "audio":
+        enc_out = _run_encoder(params, batch["frontend"].astype(x.dtype), ctx)
+    elif a.family == "vlm" and "frontend" in batch:
+        patches = jax.nn.gelu(batch["frontend"].astype(x.dtype)
+                              @ params["proj"]["w1"]) @ params["proj"]["w2"]
+        n = patches.shape[1]
+        x = jnp.concatenate([patches, x[:, n:]], axis=1)
+
+    aux = jnp.float32(0.0)
+    for i, sub in enumerate(prefix):
+        x, aux = _apply_sublayer(params[f"prefix{i}"], x, sub, ctx,
+                                 enc_out=enc_out, aux0=aux)
+
+    def body(carry, p):
+        x, aux = carry
+        for j, sub in enumerate(group):
+            x, aux = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
+                                     enc_out=enc_out, aux0=aux)
+        return (x, aux), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+
+    x = layers.norm_apply(params["final_norm"], x, a.norm)
+    return x, aux / max(1, n_groups * len(group))
+
+
+def forward(params, batch, ctx: ModelCtx):
+    """Full-sequence forward (train / prefill). Returns (logits, aux)."""
+    x, aux = forward_features(params, batch, ctx)
+    logits = layers.unembed_apply(params["embed"], x)
+    logits = sharding.constrain(logits, "batch", None, "model")
+    return logits, aux
+
+
+def _fused_xent(params, x, labels, ctx: ModelCtx):
+    """Vocab-sharded cross entropy without materializing f32 logits or
+    gathering the vocabulary axis (perf flag; EXPERIMENTS.md §Perf.1).
+
+    logits stay bf16 and sharded over "model"; the max / sum-exp / label
+    reductions over the sharded vocab axis lower to small all-reduces
+    instead of a [B,S,V] all-gather; take_along_axis is replaced by an
+    iota==label masked sum (elementwise on the sharded operand).
+    """
+    table = params["embed"]["table"]                  # [V, d]
+    logits = x @ table.T.astype(x.dtype)              # bf16 [B,S,V]
+    logits = sharding.constrain(logits, "batch", None, "model")
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    V = table.shape[0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == labels[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    return lse - label_logit                          # [B,S]
+
+
+def loss_fn(params, batch, ctx: ModelCtx, aux_weight: float = 1.0):
+    labels = batch["labels"]
+    if ctx.fused_xent:
+        x, aux = forward_features(params, batch, ctx)
+        nll = _fused_xent(params, x, labels, ctx)
+    else:
+        logits, aux = forward(params, batch, ctx)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    nll = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = nll + aux_weight * aux
+    return total, {"nll": nll, "aux": aux, "loss": total}

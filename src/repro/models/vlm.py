@@ -1,0 +1,26 @@
+"""Vision frontend STUB for InternVL2 (sanctioned carve-out).
+
+The real frontend is InternViT-6B (448px, pixel-shuffle to 256 tokens per
+tile) + an MLP projector.  Per the assignment the ViT is a stub:
+``patch_spec``/``make_patches`` provide 256 patch embeddings at the ViT
+output width (1024); the in-model 2-layer projector
+(models/transformer.py, params["proj"]) maps them into d_model and they
+replace the first ``frontend_len`` token positions at prefill.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+VIT_WIDTH = 1024          # stubbed vision-encoder output width
+PATCHES_PER_IMAGE = 256
+
+
+def patch_shape(batch: int, arch) -> tuple:
+    return (batch, arch.frontend_len or PATCHES_PER_IMAGE, VIT_WIDTH)
+
+
+def make_patches(rng: np.random.Generator, batch: int, arch) -> jnp.ndarray:
+    return jnp.asarray(
+        rng.standard_normal(patch_shape(batch, arch)).astype(np.float32))

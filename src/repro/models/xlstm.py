@@ -1,0 +1,262 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan with exponential gating).
+
+xlstm-350m interleaves them 7:1 (seven mLSTM blocks then one sLSTM block).
+mLSTM train/prefill uses the parallel quadratic formulation (stabilized
+exponential gating); decode keeps the (C, n, m) recurrent state — constant
+memory per step, which is what makes long_500k feasible for this family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    num_heads: int = 4
+    proj_factor: float = 2.0      # mLSTM up-projection
+    slstm_every: int = 8          # one sLSTM per this many blocks
+    dtype: jnp.dtype = jnp.bfloat16
+    chunk_size: int = 0           # >0: chunkwise mLSTM (O(S·C) instead of
+                                  # the O(S²) parallel D-matrix; §Perf)
+
+    @property
+    def d_inner(self):
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self):
+        return self.d_inner // self.num_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 8)
+    d, di, H, hd = cfg.d_model, cfg.d_inner, cfg.num_heads, cfg.head_dim
+    s, si = 1 / np.sqrt(d), 1 / np.sqrt(di)
+    return {
+        "w_up": layers._norm_init(ks[0], (d, 2 * di), s).astype(cfg.dtype),
+        "wq": layers._norm_init(ks[1], (di, di), si).astype(cfg.dtype),
+        "wk": layers._norm_init(ks[2], (di, di), si).astype(cfg.dtype),
+        "wv": layers._norm_init(ks[3], (di, di), si).astype(cfg.dtype),
+        "w_if": layers._norm_init(ks[4], (di, 2 * H), si).astype(cfg.dtype),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]
+                                ).astype(jnp.float32),
+        "ln": {"scale": jnp.ones((cfg.head_dim,), jnp.float32)},
+        "w_down": layers._norm_init(ks[5], (di, d), si).astype(cfg.dtype),
+    }
+
+
+def _mlstm_gates(params, xu, H):
+    g = (xu @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    i_pre, f_pre = g[..., :H], g[..., H:]          # [B,S,H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    return i_pre, logf
+
+
+def mlstm_apply(params, x, cfg: XLSTMConfig):
+    """Parallel (quadratic) mLSTM. x: [B,S,d]."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    up = x @ params["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)              # [B,S,di] each
+    q = (xu @ params["wq"]).reshape(B, S, H, hd)
+    k = (xu @ params["wk"]).reshape(B, S, H, hd) / np.sqrt(hd)
+    v = (xu @ params["wv"]).reshape(B, S, H, hd)
+
+    i_pre, logf = _mlstm_gates(params, xu, H)      # [B,S,H]
+    ck = cfg.chunk_size
+    if ck and ck < S and S % ck == 0:
+        num, den, m_t = _mlstm_chunkwise(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_pre, logf, ck)
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        y = num / denom
+    else:
+        F = jnp.cumsum(logf, axis=1)               # sum of log f up to t
+        # D[t, s] = exp(F_t - F_s + i_s - m_t) for s <= t (stabilized)
+        dmat = (F[:, :, None, :] - F[:, None, :, :]
+                + i_pre[:, None, :, :])            # [B, t, s, H]
+        tri = jnp.tril(jnp.ones((S, S), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m = jnp.max(dmat, axis=2, keepdims=True)   # [B,t,1,H]
+        dexp = jnp.exp(dmat - m)                   # stabilizer
+        logits = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                            k.astype(jnp.float32))
+        w = logits * dexp
+        denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                            jnp.exp(-m))           # [B,t,1,H]
+        y = jnp.einsum("btsh,bshd->bthd", w / denom, v.astype(jnp.float32))
+    y = layers.norm_apply(params["ln"], y, "rmsnorm").reshape(B, S, -1)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_down"]
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, logf, chunk: int):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + inter-chunk
+    recurrent (C, n, m) carry — the same stabilized exponential-gating math
+    as the parallel form, with memory O(S·chunk) instead of O(S²).
+
+    q,k,v: [B,S,H,hd] (k pre-scaled by 1/sqrt(hd)); i_pre/logf: [B,S,H].
+    Returns the un-normalized numerator/denominator pair as [B,S,H,hd]/[B,S,H].
+    """
+    B, S, H, hd = q.shape
+    nc = S // chunk
+    ck = chunk
+
+    def split(t):
+        return t.reshape(B, nc, ck, *t.shape[2:]).transpose(1, 0, 2, 3, 4) \
+            if t.ndim == 4 else \
+            t.reshape(B, nc, ck, t.shape[-1]).transpose(1, 0, 2, 3)
+
+    qc, kc, vc = split(q), split(k), split(v)       # [nc,B,ck,H,hd]
+    ic, fc = split(i_pre), split(logf)              # [nc,B,ck,H]
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry                          # [B,H,hd,hd],[B,H,hd],[B,H]
+        qj, kj, vj, ij, fj = inp
+        F = jnp.cumsum(fj, axis=1)                  # [B,ck,H]
+        # intra-chunk decay matrix: F_t - F_s + i_s (s <= t)
+        dmat = (F[:, :, None, :] - F[:, None, :, :] + ij[:, None, :, :])
+        tri = jnp.tril(jnp.ones((ck, ck), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)             # [B,ck,H]
+        m_inter = F + m0[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        logits = jnp.einsum("bthd,bshd->btsh", qj, kj)
+        num = jnp.einsum("btsh,bshd->bthd", logits * dexp, vj)
+        den = jnp.sum(logits * dexp, axis=2)        # [B,ck,H]
+        # inter-chunk contribution from carried state
+        w_inter = jnp.exp(m_inter - m_t)            # [B,ck,H]
+        num = num + w_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qj, C0)
+        den = den + w_inter * jnp.einsum("bthd,bhd->bth", qj, n0)
+        # carry update to chunk end (t = ck)
+        F_T = F[:, -1:, :]                          # [B,1,H]
+        g = F_T - F + ij                            # [B,ck,H]
+        m_up = jnp.maximum(F_T[:, 0] + m0, jnp.max(g, axis=1))   # [B,H]
+        wk = jnp.exp(g - m_up[:, None, :])          # [B,ck,H]
+        C_new = (jnp.exp(F_T[:, 0] + m0 - m_up)[..., None, None] * C0
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wk, kj, vj))
+        n_new = (jnp.exp(F_T[:, 0] + m0 - m_up)[..., None] * n0
+                 + jnp.einsum("bsh,bshd->bhd", wk, kj))
+        return (C_new, n_new, m_up), (num, den, m_t)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, (num, den, m_t) = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                      (qc, kc, vc, ic, fc))
+    merge = lambda t: t.transpose(1, 0, 2, 3, 4).reshape(B, S, *t.shape[3:]) \
+        if t.ndim == 5 else t.transpose(1, 0, 2, 3).reshape(B, S, t.shape[-1])
+    return merge(num), merge(den), merge(m_t)
+
+
+def init_mlstm_state(batch: int, cfg: XLSTMConfig):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(params, x, state, cfg: XLSTMConfig):
+    """Recurrent step. x: [B,1,d]."""
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim
+    up = x @ params["w_up"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    q = (xu @ params["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = ((xu @ params["wk"]).reshape(B, H, hd) / np.sqrt(hd)).astype(jnp.float32)
+    v = (xu @ params["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    i_pre, logf = _mlstm_gates(params, xu, H)
+    i_pre, logf = i_pre[:, 0], logf[:, 0]          # [B,H]
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fg = jnp.exp(logf + state["m"] - m_new)[..., None]
+    ig = jnp.exp(i_pre - m_new)[..., None]
+    C = fg[..., None] * state["C"] + ig[..., None] * (k[..., None] * v[..., None, :])
+    n = fg * state["n"] + ig * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    y = layers.norm_apply(params["ln"], num / den, "rmsnorm")
+    y = y.reshape(B, 1, -1).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_down"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    s = 1 / np.sqrt(d)
+    return {
+        "w_gates": layers._norm_init(ks[0], (d, 4 * d), s).astype(cfg.dtype),
+        "r_gates": layers._norm_init(ks[1], (H, hd, 4 * hd),
+                                     1 / np.sqrt(hd)).astype(jnp.float32),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "ln": {"scale": jnp.ones((d,), jnp.float32)},
+        "w_out": layers._norm_init(ks[2], (d, d), s).astype(cfg.dtype),
+    }
+
+
+def slstm_apply(params, x, cfg: XLSTMConfig, state=None):
+    """Sequential sLSTM over time. x: [B,S,d] -> ([B,S,d], state)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    wx = (x @ params["w_gates"]).astype(jnp.float32) + params["b_gates"]
+    wx = wx.reshape(B, S, 4, H, hd)
+
+    if state is None:
+        state = init_slstm_state(B, cfg)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, params["r_gates"])  # [B,H,4hd]
+        rec = rec.reshape(B, H, 4, hd).transpose(0, 2, 1, 3)
+        z_pre, i_pre, f_pre, o_pre = [wx_t[:, g] + rec[:, g] for g in range(4)]
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+        ig = jnp.exp(i_pre - m_new)
+        fg = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)
+        zv = jnp.tanh(z_pre)
+        og = jax.nn.sigmoid(o_pre)
+        c_new = fg * c + ig * zv
+        n_new = fg * n + ig
+        h_new = og * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d)       # [B,S,d]
+    y = layers.norm_apply(params["ln"], hs, "rmsnorm").astype(x.dtype)
+    new_state = dict(zip(("c", "n", "h", "m"), carry))
+    return y @ params["w_out"], new_state
+
+
+def init_slstm_state(batch: int, cfg: XLSTMConfig):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, x, state, cfg: XLSTMConfig):
+    y, new_state = slstm_apply(params, x, cfg, state)
+    return y, new_state

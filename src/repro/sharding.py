@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules and path-based parameter PartitionSpecs.
+
+A thin layer between model code and the mesh: model code names *logical*
+axes ("batch", "model", "expert", "kv_len"); the active :class:`AxisRules`
+maps them to mesh axes.  ``constrain`` is a no-op outside a rules context so
+the same model code runs on a single CPU device in tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+class AxisRules:
+    def __init__(self, mapping: dict, mesh=None):
+        # logical name -> mesh axis (str | tuple | None)
+        self.mapping = dict(mapping)
+        self.mesh = mesh
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.mapping.get(logical)
+
+    def axis_size(self, logical: str) -> int:
+        ax = self.resolve(logical)
+        if ax is None or self.mesh is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def logical_spec(*logical_axes, dims=None) -> P:
+    """PartitionSpec from logical axis names; honours divisibility.
+
+    ``dims``: optional concrete dim sizes — an axis whose size does not
+    divide the mesh extent falls back to replication (e.g. 6 attention
+    heads on a 16-way model axis).
+    """
+    rules = current_rules()
+    if rules is None:
+        return P()
+    out = []
+    for i, name in enumerate(logical_axes):
+        ax = rules.resolve(name)
+        if ax is not None and dims is not None:
+            if dims[i] % rules.axis_size(name) != 0:
+                ax = None
+        out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axes (no-op without rules)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = logical_spec(*logical_axes, dims=x.shape[: len(logical_axes)])
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by pytree path
+# ---------------------------------------------------------------------------
+
+
+def build_param_specs(params, rules: list):
+    """Assign a PartitionSpec to every leaf by regex on its '/'-joined path.
+
+    ``rules`` is an ordered list of (regex, PartitionSpec); first match wins;
+    default is fully replicated.  Specs longer than a leaf's rank or with
+    non-divisible dims degrade gracefully (offending axis replicated).
+    """
+    compiled = [(re.compile(rx), spec) for rx, spec in rules]
+
+    def path_str(path):
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    def assign(path, leaf):
+        ps = path_str(path)
+        for rx, spec in compiled:
+            if rx.search(ps):
+                return _fit_spec(spec, leaf)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _fit_spec(spec: P, leaf) -> P:
+    """Trim/repair a spec against a concrete leaf shape."""
+    mesh_shape = None
+    rules = current_rules()
+    if rules is not None and rules.mesh is not None:
+        mesh_shape = dict(rules.mesh.shape)
+    dims = getattr(leaf, "shape", ())
+    out = []
+    for i, ax in enumerate(spec):
+        if i >= len(dims):
+            break
+        if ax is None or mesh_shape is None:
+            out.append(ax)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        extent = 1
+        for a in axes:
+            extent *= mesh_shape.get(a, 1)
+        out.append(ax if dims[i] % extent == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)

@@ -1,0 +1,135 @@
+"""Training loop: step factory (fwd+bwd+AdamW, optional grad accumulation),
+metric aggregation, checkpoint hooks.  The jitted step is the unit the
+multi-pod dry-run lowers."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig, RunConfig
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
+from repro.models import model as model_lib, transformer
+from repro.optim import adamw
+
+
+def make_train_step(ctx: transformer.ModelCtx, run: RunConfig,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Pure function of its inputs — jit it (optionally with shardings).
+    """
+    if opt_cfg is None:
+        opt_cfg = adamw.AdamWConfig(
+            learning_rate=run.learning_rate, warmup_steps=run.warmup_steps,
+            total_steps=run.total_steps, weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip)
+
+    def loss(params, batch):
+        return transformer.loss_fn(params, batch, ctx,
+                                   aux_weight=run.aux_weight)
+
+    def step(params, opt_state, batch):
+        rules = model_lib.default_rules(ctx.mesh) if ctx.mesh else None
+        ctxm = sharding.axis_rules(rules) if rules else _null()
+        with ctxm:
+            if run.microbatch and run.microbatch < batch["tokens"].shape[0]:
+                params_new, opt_state, metrics = _accum_step(
+                    params, opt_state, batch, loss, opt_cfg, run.microbatch)
+                return params_new, opt_state, metrics
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+            params, opt_state, opt_metrics = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics, **opt_metrics)
+            return params, opt_state, metrics
+
+    return step
+
+
+def _null():
+    import contextlib
+    return contextlib.nullcontext()
+
+
+def _accum_step(params, opt_state, batch, loss, opt_cfg, micro: int):
+    B = batch["tokens"].shape[0]
+    n = B // micro
+    split = jax.tree_util.tree_map(
+        lambda x: x.reshape((n, micro) + x.shape[1:]), batch)
+
+    def body(carry, mb):
+        gsum, msum = carry
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, mb)
+        gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
+        msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+        return (gsum, msum), None
+
+    zeros_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = {"nll": 0.0, "aux": 0.0, "loss": 0.0}
+    zeros_m = jax.tree_util.tree_map(jnp.float32, zeros_m)
+    (gsum, msum), _ = jax.lax.scan(body, (zeros_g, zeros_m), split)
+    grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+    metrics = jax.tree_util.tree_map(lambda m: m / n, msum)
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        params, grads, opt_state, opt_cfg)
+    return params, opt_state, dict(metrics, **opt_metrics)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    metrics_history: list
+    steps_per_sec: float
+    params: object
+    opt_state: object
+
+
+def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
+          aux_mode: Optional[str] = None, log_every: int = 10,
+          ckpt_path: Optional[str] = None, eval_fn=None,
+          data_seed: Optional[int] = None, verbose: bool = True
+          ) -> TrainResult:
+    """End-to-end training driver (used by examples + benchmarks)."""
+    aux_mode = aux_mode or run.aux_mode
+    ctx = model_lib.build_ctx(arch, mesh, seq_len=run.seq_len,
+                              global_batch=run.global_batch,
+                              aux_mode=aux_mode, remat=run.remat)
+    rules = model_lib.default_rules(mesh)
+    key = jax.random.PRNGKey(run.seed)
+    with mesh, sharding.axis_rules(rules):
+        params = model_lib.init_params(key, ctx, rules=rules)
+        opt_state = adamw.init_state(params)
+        step_fn = jax.jit(make_train_step(ctx, run))
+        data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size,
+                                      seq_len=run.seq_len,
+                                      global_batch=run.global_batch,
+                                      seed=data_seed if data_seed is not None
+                                      else run.seed), arch)
+        losses, history = [], []
+        t0 = time.time()
+        for i in range(steps):
+            batch = shard_batch(data.batch(i), mesh)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                losses.append(m["loss"])
+                history.append(m)
+                if verbose:
+                    print(f"step {i:5d} loss {m['loss']:.4f} "
+                          f"nll {m['nll']:.4f} aux {m.get('aux', 0):.4f}")
+        dt = time.time() - t0
+        if ckpt_path:
+            ckpt.save(ckpt_path, {"params": params, "opt": opt_state},
+                      step=steps)
+    return TrainResult(losses=losses, metrics_history=history,
+                       steps_per_sec=steps / max(dt, 1e-9),
+                       params=params, opt_state=opt_state)

@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — unit/smoke tests
+must see the real single CPU device; multi-device behaviour is tested via
+subprocesses in test_multidevice.py, and the 512-device production meshes
+only ever exist inside repro.launch.dryrun."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,85 @@
+"""Unit tests for the HLO collective parser and roofline math
+(launch/analysis.py) — these guard the §Roofline numbers."""
+
+import numpy as np
+import pytest
+
+from repro.launch import analysis
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert analysis._shape_bytes("bf16[8,128]") == 8 * 128 * 2
+        assert analysis._shape_bytes("f32[4]") == 16
+        assert analysis._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+    def test_ignores_unknown_dtypes(self):
+        assert analysis._shape_bytes("token[]") == 0
+
+
+class TestGroupParsing:
+    def test_explicit_groups(self):
+        line = "replica_groups={{0,1},{2,3}}"
+        g = analysis._parse_groups(line, 4)
+        assert g == [[0, 1], [2, 3]]
+
+    def test_iota_groups(self):
+        line = "replica_groups=[4,2]<=[8]"
+        g = analysis._parse_groups(line, 8)
+        assert g == [[0, 1], [2, 3], [4, 5], [6, 7]]
+
+    def test_iota_transposed(self):
+        line = "replica_groups=[2,4]<=[4,2]T(1,0)"
+        g = analysis._parse_groups(line, 8)
+        assert g == [[0, 2, 4, 6], [1, 3, 5, 7]]
+
+    def test_source_target_pairs(self):
+        line = "source_target_pairs={{0,1},{1,0}}"
+        g = analysis._parse_groups(line, 4)
+        assert g == [[0, 1], [1, 0]]
+
+
+class TestCollectiveStats:
+    def test_tuple_allreduce_counted(self):
+        hlo = ("%ar = (f32[256,128]{1,0}, f32[64]{0}) "
+               "all-reduce(f32[256,128] %a, f32[64] %b), "
+               "replica_groups=[2,4]<=[4,2]T(1,0), to_apply=%add")
+        st = analysis.collective_stats(hlo, num_devices=8, devices_per_pod=4)
+        want = (256 * 128 * 4 + 64 * 4) * 2 * 3 / 4  # ring all-reduce
+        assert st.dci_bytes == pytest.approx(want)
+        assert st.ici_bytes == 0
+
+    def test_intra_pod_classified_ici(self):
+        hlo = ("%a2a = bf16[16,64]{1,0} all-to-all(bf16[16,64] %x), "
+               "replica_groups={{0,1,2,3}}, dimensions={0}")
+        st = analysis.collective_stats(hlo, num_devices=8, devices_per_pod=4)
+        assert st.ici_bytes == pytest.approx(16 * 64 * 2 * 3 / 4)
+        assert st.dci_bytes == 0
+
+    def test_start_done_counted_once(self):
+        hlo = ("%s = bf16[8]{0} all-gather-start(bf16[2] %x), "
+               "replica_groups={{0,1,2,3}}, dimensions={0}\n"
+               "%d = bf16[8]{0} all-gather-done(bf16[8] %s)")
+        st = analysis.collective_stats(hlo, num_devices=4, devices_per_pod=4)
+        assert st.counts.get("all-gather", 0) == 1
+
+    def test_no_collectives(self):
+        st = analysis.collective_stats("%add = f32[2] add(f32[2], f32[2])",
+                                       num_devices=4, devices_per_pod=2)
+        assert st.ici_bytes == 0 and st.dci_bytes == 0
+
+
+class TestRooflineMath:
+    def test_dominant_selection(self):
+        class FakeCompiled:
+            def cost_analysis(self):
+                return {"flops": 197e12 * 0.001,       # 1 ms compute
+                        "bytes accessed": 819e9 * 0.01}  # 10 ms memory
+            def as_text(self):
+                return ""
+        r = analysis.roofline(FakeCompiled(), num_devices=4,
+                              devices_per_pod=2, model_flops=197e12 * 0.002)
+        assert r.dominant == "memory"
+        assert r.t_compute == pytest.approx(1e-3)
+        assert r.t_memory == pytest.approx(1e-2)
+        assert r.useful_ratio == pytest.approx(0.5)

@@ -1,0 +1,94 @@
+"""Gate + auxiliary-loss unit tests (paper Eq. 1 / Eq. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gating
+
+
+def _gate_out(key, T=64, d=16, N=8, k=2, mode="lb", penalties=(1., 1., 1.)):
+    cfg = gating.GateConfig(num_experts=N, top_k=k, aux_mode=mode,
+                            penalty_by_level=penalties)
+    params = gating.init_gate_params(key, d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d))
+    return cfg, gating.gate_forward(params, x, cfg, None)
+
+
+def test_topk_shapes_and_normalization(key):
+    cfg, out = _gate_out(key, k=2)
+    assert out["topk_idx"].shape == (64, 2)
+    np.testing.assert_allclose(out["topk_weight"].sum(-1), 1.0, rtol=1e-5)
+    assert (out["probs"] >= 0).all()
+
+
+def test_dispatch_fractions_sum_to_one(key):
+    _, out = _gate_out(key)
+    f = gating.dispatch_fractions(out["topk_idx"], 8)
+    assert float(f.sum()) == pytest.approx(1.0)
+
+
+def test_lb_loss_is_one_for_perfect_balance():
+    """With uniform probs and perfectly balanced dispatch, l_aux == 1."""
+    N, T = 4, 16
+    probs = jnp.full((T, N), 1.0 / N)
+    idx = jnp.tile(jnp.arange(N), T // N * 2).reshape(T, 2)[:, :1]
+    gate_out = {"probs": probs, "topk_idx": idx,
+                "topk_weight": jnp.ones((T, 1))}
+    cfg = gating.GateConfig(num_experts=N, top_k=1, aux_mode="lb")
+    assert float(gating.aux_loss(gate_out, cfg)) == pytest.approx(1.0)
+
+
+def test_ta_loss_penalizes_far_dispatch_more():
+    """Same dispatch stats, far experts -> larger l_topo than near."""
+    N, T = 4, 32
+    probs = jnp.full((T, N), 1.0 / N)
+    cfg = gating.GateConfig(num_experts=N, top_k=1, aux_mode="ta",
+                            penalty_by_level=(0.5, 0.5, 2.0))
+    near_levels = jnp.array([0, 1, 1, 1])
+    far_levels = jnp.array([2, 2, 2, 2])
+    idx = jnp.tile(jnp.arange(N), T // N).reshape(T, 1)
+    gate_out = {"probs": probs, "topk_idx": idx,
+                "topk_weight": jnp.ones((T, 1))}
+    l_near = float(gating.aux_loss(gate_out, cfg, near_levels))
+    l_far = float(gating.aux_loss(gate_out, cfg, far_levels))
+    assert l_far > l_near
+
+
+def test_ta_equals_lb_when_penalties_uniform(key):
+    cfg_ta, out = _gate_out(key, mode="ta")
+    cfg_lb = gating.GateConfig(num_experts=8, top_k=2, aux_mode="lb")
+    levels = jnp.zeros((8,), jnp.int32)
+    assert float(gating.aux_loss(out, cfg_ta, levels)) == pytest.approx(
+        float(gating.aux_loss(out, cfg_lb)), rel=1e-6)
+
+
+def test_hir_bias_shifts_dispatch_toward_near(key):
+    cfg = gating.GateConfig(num_experts=8, top_k=2, aux_mode="hir",
+                            hir_bias=5.0)
+    params = gating.init_gate_params(key, 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 16))
+    levels = jnp.array([0, 1, 1, 1, 2, 2, 2, 2])
+    out = gating.gate_forward(params, x, cfg, levels)
+    f = gating.dispatch_fractions(out["topk_idx"], 8)
+    near = float(f[:4].sum())
+    assert near > 0.9  # strong compulsory preference
+
+
+def test_expert_levels_mapping():
+    lv = gating.expert_levels(num_experts=8, experts_per_rank=2,
+                              ep_per_pod=2, num_pods=2,
+                              my_pod=jnp.int32(0), my_data=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(lv), [0, 0, 1, 1, 2, 2, 2, 2])
+
+
+@given(st.integers(2, 16), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_property_penalties_positive_mean_one(n_levels_seed, _):
+    ratios = tuple(np.random.default_rng(n_levels_seed)
+                   .uniform(0.1, 3.0, 3))
+    p = gating.ta_penalties(ratios)
+    assert all(x > 0 for x in p)
+    assert np.mean(p) == pytest.approx(1.0, rel=1e-6)

@@ -1,0 +1,162 @@
+"""Multi-device behaviour via subprocesses (XLA host-device forcing must
+happen before jax import, so these cannot run in the pytest process).
+
+Covers: hierarchical a2a dispatch correctness across ranks, TA-vs-even
+collective-byte reduction on a 2-pod mesh, and a miniature dry-run."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(ndev: int, code: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_a2a_dispatch_matches_dense_across_ranks():
+    """4-rank EP (2 pods x 2): hierarchical a2a output == dense reference."""
+    out = _run(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core import gating, moe as moe_lib
+        from repro.core.capacity import make_plan
+
+        mesh = jax.make_mesh((2, 2), ("pod", "data"),
+            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        D, F, N, K, T = 16, 32, 8, 2, 32   # T per rank
+        cfg = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+                                capacity_factor=8.0, dtype=jnp.float32)
+        ep = moe_lib.EPSpec(num_pods=2, ep_per_pod=2, pod_axis="pod",
+                            data_axis="data", model_axis=None)
+        gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="lb")
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(0), cfg, ep,
+                                         gate_cfg)
+        plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
+                         capacity_factor=8.0, num_pods=2, ep_per_pod=2,
+                         mode="even")
+        x = jax.random.normal(jax.random.PRNGKey(1), (4 * T, D), jnp.float32)
+
+        def body(p, xx):
+            y, m = moe_lib.moe_apply_a2a(p, xx, cfg, ep, plan, gate_cfg)
+            return y
+        pspecs = {"gate": {"w": P()},
+                  "w_in": P(("pod", "data"), None, None),
+                  "w_gate": P(("pod", "data"), None, None),
+                  "w_out": P(("pod", "data"), None, None)}
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, P(("pod", "data"), None)),
+                       out_specs=P(("pod", "data"), None), check_vma=False)
+        with mesh:
+            y = fn(params, x)
+
+        # dense reference on the full batch
+        out = gating.gate_forward(params["gate"], x, gate_cfg, None)
+        want = jnp.zeros_like(x)
+        for e in range(N):
+            h = jax.nn.silu(x @ params["w_gate"][e]) * (x @ params["w_in"][e])
+            fe = h @ params["w_out"][e]
+            w = jnp.sum(jnp.where(out["topk_idx"] == e,
+                                  out["topk_weight"], 0.0), axis=1)
+            want = want + fe * w[:, None]
+        err = float(jnp.abs(y - want).max())
+        print("ERR", err)
+        assert err < 1e-3, err
+    """)
+    assert "ERR" in out
+
+
+@pytest.mark.slow
+def test_ta_reduces_crosspod_bytes_vs_even():
+    """On a (2,2,1) mesh the TA plan must shrink the far a2a buffers and
+    therefore cross-pod wire bytes in the compiled HLO."""
+    out = _run(4, """
+        import jax, jax.numpy as jnp
+        from repro.configs.base import get_config, RunConfig
+        from repro.models import model as model_lib
+        from repro.training import trainer as trainer_lib
+        from repro import sharding
+        from repro.launch import analysis
+        from repro.optim import adamw
+
+        mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,)*3)
+        arch = get_config("gpt3_medium_moe").reduced()
+        import dataclasses
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, num_experts=4, top_k=2))
+        res = {}
+        for mode in ("lb", "ta"):
+            ctx = model_lib.build_ctx(arch, mesh, seq_len=64,
+                                      global_batch=8, aux_mode=mode)
+            rules = model_lib.default_rules(mesh)
+            run = RunConfig(seq_len=64, global_batch=8, aux_mode=mode)
+            with mesh, sharding.axis_rules(rules):
+                ap = model_lib.abstract_params(jax.random.PRNGKey(0), ctx)
+                specs = model_lib.input_specs(arch, "train_4k", mesh, ctx=ctx)
+                # shrink to this test's shape
+                import jax as j
+                specs = {k: j.ShapeDtypeStruct((8, 64), v.dtype,
+                                               sharding=v.sharding)
+                         for k, v in specs.items() if k != "frontend"}
+                aopt = j.eval_shape(adamw.init_state, ap)
+                step = trainer_lib.make_train_step(ctx, run)
+                lowered = j.jit(step).lower(ap, aopt, specs)
+                comp = lowered.compile()
+                st = analysis.collective_stats(comp.as_text(),
+                                               num_devices=4,
+                                               devices_per_pod=2)
+                res[mode] = (st.ici_bytes, st.dci_bytes)
+        print("LB", res["lb"], "TA", res["ta"])
+        assert res["ta"][1] < res["lb"][1], (res)
+    """)
+    assert "TA" in out
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8dev():
+    """The dry-run machinery end-to-end on a small 2x2x2 mesh."""
+    out = _run(8, """
+        import jax, jax.numpy as jnp
+        import repro.launch.dryrun as dr
+        # monkeypatch production mesh to the mini mesh
+        import repro.launch.mesh as mesh_lib
+        def mini(multi_pod=False):
+            shape = (2, 2, 2) if multi_pod else (4, 2)
+            axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+            return jax.make_mesh(shape, axes,
+                axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+        dr.make_production_mesh = mini
+        import dataclasses
+        from repro.configs import base
+        # shrink shapes for CPU feasibility
+        base.INPUT_SHAPES["train_4k"] = dict(seq_len=32, global_batch=8,
+                                             kind="train")
+        base.INPUT_SHAPES["decode_32k"] = dict(seq_len=64, global_batch=8,
+                                               kind="decode")
+        orig = base.get_config
+        base.get_config = lambda a: orig(a).reduced()
+        dr.get_config = base.get_config
+        dr.INPUT_SHAPES = base.INPUT_SHAPES
+        for shape in ("train_4k", "decode_32k"):
+            for multi in (False, True):
+                rec, comp = dr.lower_one("gpt3_medium_moe", shape, multi)
+                assert rec["status"] == "ok", rec
+                print(shape, rec["mesh"], rec["dominant"],
+                      int(rec["flops_per_chip"]))
+        print("MINI-DRYRUN-OK")
+    """)
+    assert "MINI-DRYRUN-OK" in out

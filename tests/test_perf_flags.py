@@ -1,0 +1,151 @@
+"""Beyond-paper perf optimizations must be numerically equivalent to the
+baseline paths (EXPERIMENTS.md §Perf): fused vocab-sharded xent and
+flash-style blockwise attention."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.configs.base import get_config
+from repro.models import layers, model as model_lib, transformer
+
+
+@pytest.fixture(scope="module")
+def setup(mesh11):
+    arch = dataclasses.replace(get_config("internlm2_1_8b").reduced(),
+                               dtype="float32")
+    ctx0 = model_lib.build_ctx(arch, mesh11, seq_len=24, global_batch=2,
+                               aux_mode="none")
+    rules = model_lib.default_rules(mesh11)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              arch.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    with mesh11, sharding.axis_rules(rules):
+        params = model_lib.init_params(jax.random.PRNGKey(0), ctx0)
+    return mesh11, rules, ctx0, params, batch
+
+
+def test_fused_xent_matches_baseline(setup):
+    mesh, rules, ctx0, params, batch = setup
+    ctx1 = dataclasses.replace(ctx0, fused_xent=True)
+    with mesh, sharding.axis_rules(rules):
+        l0, _ = jax.jit(lambda p, b: transformer.loss_fn(p, b, ctx0))(
+            params, batch)
+        l1, _ = jax.jit(lambda p, b: transformer.loss_fn(p, b, ctx1))(
+            params, batch)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-6)
+
+
+def test_fused_xent_grads_match(setup):
+    mesh, rules, ctx0, params, batch = setup
+    ctx1 = dataclasses.replace(ctx0, fused_xent=True)
+    with mesh, sharding.axis_rules(rules):
+        g0 = jax.jit(jax.grad(
+            lambda p: transformer.loss_fn(p, batch, ctx0)[0]))(params)
+        g1 = jax.jit(jax.grad(
+            lambda p: transformer.loss_fn(p, batch, ctx1)[0]))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6, rtol=1e-4)
+
+
+def test_blockwise_forward_matches(setup):
+    mesh, rules, ctx0, params, batch = setup
+    ctx1 = dataclasses.replace(ctx0, use_blockwise=True)
+    with mesh, sharding.axis_rules(rules):
+        f0, _ = jax.jit(lambda p, b: transformer.forward(p, b, ctx0))(
+            params, batch)
+        f1, _ = jax.jit(lambda p, b: transformer.forward(p, b, ctx1))(
+            params, batch)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16),
+                                           (False, 0)])
+def test_blockwise_sdpa_vs_naive(causal, window):
+    q = jax.random.normal(jax.random.PRNGKey(2), (2, 50, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(3), (2, 50, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(4), (2, 50, 2, 16), jnp.float32)
+    a = layers._blockwise_sdpa(q, k, v, causal=causal,
+                               sliding_window=window, block_k=16)
+    b = layers._sdpa(q, k, v, causal=causal, sliding_window=window,
+                     q_positions=jnp.arange(50), k_positions=jnp.arange(50))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_blockwise_mla_matches(mesh11, key):
+    from repro.models import mla as mla_lib
+    cfg0 = mla_lib.MLAConfig(d_model=64, num_heads=4, kv_lora_rank=32,
+                             qk_nope_dim=16, qk_rope_dim=8, v_dim=16,
+                             dtype=jnp.float32)
+    cfg1 = dataclasses.replace(cfg0, use_blockwise=True)
+    params = mla_lib.init_mla(key, cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 40, 64), jnp.float32)
+    y0, _ = mla_lib.mla_apply(params, x, cfg0)
+    y1, _ = mla_lib.mla_apply(params, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_mamba_chunked_scan_matches():
+    from repro.models import mamba as mamba_lib
+    cfg0 = mamba_lib.MambaConfig(d_model=32, d_state=8, dtype=jnp.float32)
+    cfg1 = dataclasses.replace(cfg0, scan_chunk=16)
+    params = mamba_lib.init_mamba(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    y0 = mamba_lib.mamba_apply(params, x, cfg0)
+    y1 = mamba_lib.mamba_apply(params, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_quantized_a2a_close_to_exact(mesh11, key):
+    from repro.core import gating, moe as moe_lib
+    from repro.core.capacity import make_plan
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    D, F, N, K, T = 16, 32, 4, 2, 64
+    ep = moe_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
+                        data_axis="data", model_axis="model")
+    gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="lb")
+    plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
+                     capacity_factor=8.0, num_pods=1, ep_per_pod=1,
+                     mode="even")
+    cfg0 = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+                             capacity_factor=8.0, dtype=jnp.float32)
+    cfg1 = dataclasses.replace(cfg0, a2a_dtype="float8_e4m3fn")
+    params = moe_lib.init_moe_params(key, cfg0, ep, gate_cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (T, D), jnp.float32)
+
+    def run(cfg):
+        body = shard_map(
+            lambda p, xx: moe_lib.moe_apply_a2a(p, xx, cfg, ep, plan,
+                                                gate_cfg)[0],
+            mesh=mesh11, in_specs=(P(), P()), out_specs=P(),
+            check_vma=False)
+        with mesh11:
+            return body(params, x)
+    y0, y1 = run(cfg0), run(cfg1)
+    # f8 wire: relative error bounded by e4m3 resolution (~6%)
+    err = np.abs(np.asarray(y0) - np.asarray(y1))
+    rel = err.max() / (np.abs(np.asarray(y0)).max() + 1e-9)
+    assert rel < 0.12, rel
+
+
+def test_mlstm_chunkwise_matches():
+    from repro.models import xlstm as xlstm_lib
+    cfg0 = xlstm_lib.XLSTMConfig(d_model=32, num_heads=2, dtype=jnp.float32)
+    cfg1 = dataclasses.replace(cfg0, chunk_size=8)
+    params = xlstm_lib.init_mlstm(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    y0 = xlstm_lib.mlstm_apply(params, x, cfg0)
+    y1 = xlstm_lib.mlstm_apply(params, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=2e-5, rtol=1e-4)

@@ -1,0 +1,105 @@
+"""End-to-end behaviour tests: training convergence, TA-vs-LB parity (the
+paper's Fig. 3 claim in miniature), grad-accumulation equivalence,
+checkpoint-resume, and serving generation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.configs.base import RunConfig, get_config
+from repro.models import model as model_lib
+from repro.serving import engine
+from repro.training import trainer
+
+
+def test_loss_decreases_dense(mesh11):
+    arch = get_config("olmo_1b").reduced()
+    run = RunConfig(seq_len=32, global_batch=4, learning_rate=1e-3,
+                    total_steps=30, warmup_steps=2, aux_mode="none")
+    res = trainer.train(arch, run, mesh11, steps=25, log_every=5,
+                        verbose=False)
+    assert res.losses[-1] < res.losses[0] - 0.3
+
+
+def test_loss_decreases_moe_with_ta(mesh11):
+    arch = get_config("gpt3_medium_moe").reduced()
+    run = RunConfig(seq_len=32, global_batch=4, learning_rate=1e-3,
+                    total_steps=30, warmup_steps=2, aux_mode="ta")
+    res = trainer.train(arch, run, mesh11, steps=25, log_every=5,
+                        verbose=False)
+    assert res.losses[-1] < res.losses[0] - 0.2
+    assert all(np.isfinite(l) for l in res.losses)
+
+
+def test_ta_and_lb_convergence_parity(mesh11):
+    """Paper Fig. 3: TA-MoE must not hurt convergence vs the LB baseline.
+    On a single-level topology the penalties coincide, so this checks the
+    plumbing end-to-end; heterogeneous-penalty parity is exercised in the
+    fig3 benchmark."""
+    arch = get_config("gpt3_medium_moe").reduced()
+    run = RunConfig(seq_len=32, global_batch=4, learning_rate=1e-3,
+                    total_steps=20, warmup_steps=2)
+    r_lb = trainer.train(arch, run, mesh11, steps=15, aux_mode="lb",
+                         log_every=5, verbose=False)
+    r_ta = trainer.train(arch, run, mesh11, steps=15, aux_mode="ta",
+                         log_every=5, verbose=False)
+    assert abs(r_ta.losses[-1] - r_lb.losses[-1]) < 0.15
+
+
+def test_grad_accumulation_equivalence(mesh11, key):
+    arch = get_config("internlm2_1_8b").reduced()
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.optim import adamw
+    data = SyntheticLM(DataConfig(vocab_size=arch.vocab_size, seq_len=16,
+                                  global_batch=4), arch)
+    batch = data.batch(0)
+    rules = model_lib.default_rules(mesh11)
+    ctx = model_lib.build_ctx(arch, mesh11, seq_len=16, global_batch=4,
+                              aux_mode="none")
+    with mesh11, sharding.axis_rules(rules):
+        params = model_lib.init_params(key, ctx)
+        opt = adamw.init_state(params)
+        run_full = RunConfig(seq_len=16, global_batch=4, aux_mode="none")
+        run_acc = RunConfig(seq_len=16, global_batch=4, aux_mode="none",
+                            microbatch=2)
+        p1, _, m1 = jax.jit(trainer.make_train_step(ctx, run_full))(
+            params, opt, batch)
+        p2, _, m2 = jax.jit(trainer.make_train_step(ctx, run_acc))(
+            params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    l1 = np.asarray(jax.tree_util.tree_leaves(p1)[0], np.float32)
+    l2 = np.asarray(jax.tree_util.tree_leaves(p2)[0], np.float32)
+    np.testing.assert_allclose(l1, l2, atol=1e-4, rtol=1e-3)
+
+
+def test_checkpoint_resume(tmp_path, mesh11):
+    from repro.checkpoint import ckpt
+    arch = get_config("olmo_1b").reduced()
+    run = RunConfig(seq_len=16, global_batch=2, total_steps=10,
+                    warmup_steps=1, aux_mode="none")
+    path = str(tmp_path / "m.npz")
+    res = trainer.train(arch, run, mesh11, steps=3, verbose=False,
+                        ckpt_path=path)
+    restored = ckpt.restore(path, {"params": res.params,
+                                   "opt": res.opt_state})
+    l0 = jax.tree_util.tree_leaves(res.params)[0]
+    l1 = jax.tree_util.tree_leaves(restored["params"])[0]
+    np.testing.assert_array_equal(np.asarray(l0, np.float32),
+                                  np.asarray(l1, np.float32))
+
+
+def test_generation_runs(mesh11, key):
+    arch = get_config("internlm2_1_8b").reduced()
+    ctx = model_lib.build_ctx(arch, mesh11, seq_len=32, global_batch=2,
+                              aux_mode="none")
+    rules = model_lib.default_rules(mesh11)
+    with mesh11, sharding.axis_rules(rules):
+        params = model_lib.init_params(key, ctx)
+        prompts = jax.random.randint(key, (2, 4), 0, arch.vocab_size,
+                                     jnp.int32)
+        res = engine.generate(params, ctx, prompts, steps=6, cache_len=32)
+    assert res.tokens.shape == (2, 6)
+    assert (np.asarray(res.tokens) >= 0).all()
+    assert (np.asarray(res.tokens) < arch.vocab_size).all()

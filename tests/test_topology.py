@@ -1,0 +1,270 @@
+"""Unit + property tests for the TA-MoE topology core (paper §4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core import capacity as C
+from repro.core import comm_model as CM
+from repro.core.gating import ta_penalties
+
+
+def _sym_model(spec, betas=None):
+    topo = T.TreeTopology(spec)
+    L = topo.num_levels
+    if betas is None:
+        betas = tuple(1.0 / (100e9 / (10 ** l)) for l in range(L))
+    alphas = tuple(1e-6 * l for l in range(L))
+    return T.CommModel(topo=topo, alpha=alphas, beta=betas)
+
+
+class TestTreeTopology:
+    def test_levels_flat(self):
+        topo = T.TreeTopology(4)
+        assert topo.num_devices == 4
+        assert topo.num_levels == 2
+        assert topo.level(0, 0) == 0
+        assert topo.level(0, 3) == 1
+
+    def test_levels_two_tier(self):
+        topo = T.TreeTopology((2, 2))
+        lm = topo.level_matrix()
+        assert lm[0, 1] == 1 and lm[0, 2] == 2 and lm[2, 3] == 1
+        assert topo.is_symmetric()
+
+    def test_levels_three_tier(self):
+        topo = T.TreeTopology(((2, 2), (2, 2)))
+        assert topo.num_levels == 4
+        assert topo.level(0, 1) == 1
+        assert topo.level(0, 2) == 2
+        assert topo.level(0, 4) == 3
+
+    def test_asymmetric_detected_and_merged(self):
+        topo = T.TreeTopology(((2, 2), (2,)))
+        assert not topo.is_symmetric()
+        merged = T.symmetrize(topo)
+        assert merged.is_symmetric()
+        assert merged.num_devices == topo.num_devices  # no device lost
+        assert merged.spec == (2, 2, 2)                # paper's example
+
+    def test_level_sizes(self):
+        topo = T.TreeTopology((2, 2))
+        assert list(topo.level_sizes(0)) == [1, 1, 2]
+
+
+class TestEq7:
+    def test_row_and_col_sums(self):
+        m = _sym_model((2, 2))
+        c = T.target_dispatch(m, tokens_sent=1024.0)
+        np.testing.assert_allclose(c.sum(1), 1024.0, rtol=1e-9)
+        np.testing.assert_allclose(c.sum(0), 1024.0, rtol=1e-9)
+
+    def test_bandwidth_proportionality(self):
+        # Eq 7: chunk size linear in link bandwidth
+        m = _sym_model((2, 2), betas=(1 / 800e9, 1 / 200e9, 1 / 12.5e9))
+        c = T.target_dispatch(m, tokens_sent=1000.0)
+        assert c[0, 1] / c[0, 2] == pytest.approx(200 / 12.5, rel=1e-6)
+
+    def test_homogeneous_reduces_to_even(self):
+        m = _sym_model(4, betas=(1 / 100e9, 1 / 100e9))
+        c = T.target_dispatch(m, tokens_sent=400.0)
+        np.testing.assert_allclose(c, 100.0, rtol=1e-9)
+
+    def test_asymmetric_goes_through_merge(self):
+        topo = T.TreeTopology(((2, 2), (2,)))
+        m = T.CommModel(topo=topo, alpha=(0, 1e-6, 1e-5, 1e-5),
+                        beta=(1 / 800e9, 1 / 200e9, 1 / 12.5e9, 1 / 12.5e9))
+        c = T.target_dispatch(m, tokens_sent=600.0)
+        assert c.shape == (6, 6)
+        np.testing.assert_allclose(c.sum(1), 600.0, rtol=1e-9)
+
+    @given(n_nodes=st.integers(2, 6), node_size=st.integers(1, 6),
+           b1=st.floats(10, 1000), b2=st.floats(1, 9))
+    @settings(max_examples=40, deadline=None)
+    def test_property_constraints_hold(self, n_nodes, node_size, b1, b2):
+        """Eq 3/4 constraints hold for arbitrary 2-tier symmetric trees."""
+        spec = tuple([node_size] * n_nodes)
+        topo = T.TreeTopology(spec)
+        m = T.CommModel(topo=topo, alpha=(0.0, 1e-6, 1e-5),
+                        beta=(1 / (b1 * 2e9), 1 / (b1 * 1e9), 1 / (b2 * 1e9)))
+        c = T.target_dispatch(m, tokens_sent=512.0)
+        assert (c > 0).all()
+        np.testing.assert_allclose(c.sum(1), 512.0, rtol=1e-6)
+        np.testing.assert_allclose(c.sum(0), 512.0, rtol=1e-6)
+        # faster links never get smaller chunks
+        lm = topo.level_matrix()
+        near = c[0][lm[0] == 1].mean() if (lm[0] == 1).any() else None
+        far = c[0][lm[0] == 2].mean()
+        if near is not None:
+            assert near >= far
+
+
+class TestEq5Smoothing:
+    def test_smoothing_recovers_level_constants(self):
+        topo = T.TreeTopology((2, 2))
+        lm = topo.level_matrix()
+        rng = np.random.default_rng(0)
+        beta_true = np.array([1e-12, 5e-12, 80e-12])
+        noise = rng.normal(1.0, 0.05, lm.shape)
+        beta_ij = beta_true[lm] * noise
+        alpha_ij = np.full(lm.shape, 1e-6)
+        m = T.smooth_profile(topo, alpha_ij, beta_ij)
+        assert m.beta[1] == pytest.approx(5e-12, rel=0.2)
+        assert m.beta[2] == pytest.approx(80e-12, rel=0.2)
+
+
+class TestRatiosAndPenalties:
+    def test_ratio_conservation(self):
+        m = T.tpu_topology(2, 16)
+        r = T.per_level_ratios(m)
+        n = m.topo.level_sizes(0)
+        assert float((r * n).sum()) == pytest.approx(m.topo.num_devices)
+
+    def test_single_pod_is_even(self):
+        m = T.tpu_topology(1, 16)
+        r = T.per_level_ratios(m)
+        np.testing.assert_allclose(r, 1.0)
+
+    def test_penalties_mean_one_weighted(self):
+        m = T.tpu_topology(2, 16)
+        r = T.per_level_ratios(m)
+        sizes = tuple(int(x) for x in m.topo.level_sizes(0))
+        p = ta_penalties(tuple(r), level_sizes=sizes)
+        mean = sum(pi * si for pi, si in zip(p, sizes)) / sum(sizes)
+        assert mean == pytest.approx(1.0, rel=1e-6)
+        assert p[2] > p[1]  # slow level penalized harder
+
+
+class TestCapacityPlan:
+    def test_even_plan(self):
+        p = C.make_plan(tokens_per_device=4096, num_experts=16, top_k=2,
+                        capacity_factor=1.0, num_pods=2, ep_per_pod=4,
+                        mode="even")
+        assert p.cap_near == p.cap_far
+        assert p.experts_per_rank == 2
+
+    def test_ta_plan_ratio_matches_beta(self):
+        p = C.make_plan(tokens_per_device=65536, num_experts=160, top_k=6,
+                        capacity_factor=1.2, num_pods=2, ep_per_pod=16,
+                        mode="ta", round_multiple=1)
+        assert p.cap_near / p.cap_far == pytest.approx(
+            T.ICI_BW / T.DCI_BW, rel=0.02)
+
+    def test_ta_single_pod_equals_even(self):
+        pa = C.make_plan(tokens_per_device=4096, num_experts=16, top_k=2,
+                         capacity_factor=1.0, num_pods=1, ep_per_pod=16,
+                         mode="ta")
+        pe = C.make_plan(tokens_per_device=4096, num_experts=16, top_k=2,
+                         capacity_factor=1.0, num_pods=1, ep_per_pod=16,
+                         mode="even")
+        assert pa.cap_near == pe.cap_near
+
+    def test_hir_plan_enforces_ratio(self):
+        p = C.make_plan(tokens_per_device=8192, num_experts=32, top_k=2,
+                        capacity_factor=1.0, num_pods=2, ep_per_pod=4,
+                        mode="hir", hir_ratio=4.0, round_multiple=1)
+        assert p.cap_near / p.cap_far == pytest.approx(4.0, rel=0.05)
+
+    def test_bytes_accounting(self):
+        p = C.make_plan(tokens_per_device=4096, num_experts=16, top_k=2,
+                        capacity_factor=1.0, num_pods=2, ep_per_pod=4,
+                        mode="ta")
+        b = C.a2a_bytes(p, d_model=128, bytes_per_el=2, num_pods=2,
+                        ep_per_pod=4)
+        assert b["near_bytes"] == p.cap_near * p.experts_per_rank * 3 * 128 * 2
+        assert b["far_bytes"] == p.cap_far * p.experts_per_rank * 4 * 128 * 2
+
+
+class TestCommModelSim:
+    """Paper §3.3 motivation: uneven dispatch beats even on slow links."""
+
+    def test_uneven_beats_even_on_tree(self):
+        m = _sym_model((2, 2), betas=(1 / 800e9, 1 / 200e9, 1 / 12.5e9))
+        even = CM.dispatch_matrix_from_ratios(m, 1.0, 128e6, mode="even")
+        c_hat = T.target_dispatch(m, tokens_sent=1.0)
+        ta = CM.dispatch_matrix_from_ratios(m, 1.0, 128e6, mode="ta",
+                                            c_hat=c_hat)
+        t_even = CM.simulate_exchange(m, even)
+        t_ta = CM.simulate_exchange(m, ta)
+        assert t_ta.contention < t_even.contention
+        assert t_ta.lower_bound <= t_even.lower_bound * 1.001
+
+    @given(fast=st.floats(100, 1000), slow=st.floats(1, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_property_ta_never_slower(self, fast, slow):
+        m = _sym_model((4, 4), betas=(1 / (fast * 2e9), 1 / (fast * 1e9),
+                                      1 / (slow * 1e9)))
+        even = CM.dispatch_matrix_from_ratios(m, 1.0, 64e6, mode="even")
+        c_hat = T.target_dispatch(m, tokens_sent=1.0)
+        ta = CM.dispatch_matrix_from_ratios(m, 1.0, 64e6, mode="ta",
+                                            c_hat=c_hat)
+        assert (CM.simulate_exchange(m, ta).lower_bound
+                <= CM.simulate_exchange(m, even).lower_bound * 1.001)
+
+
+class TestRingTopology:
+    """Paper Fig. 2(b): ring topologies share the Eq. 7 solution pattern."""
+
+    def test_hop_levels(self):
+        r = T.RingTopology(8)
+        assert r.level(0, 1) == 1
+        assert r.level(0, 7) == 1      # wraparound
+        assert r.level(0, 4) == 4
+        assert r.num_levels == 5
+        assert r.is_symmetric()
+
+    def test_level_sizes(self):
+        r = T.RingTopology(6)
+        assert list(r.level_sizes()) == [1, 2, 2, 1]
+
+    def test_eq7_on_ring(self):
+        r = T.RingTopology(6)
+        # per-hop bandwidth decays with distance (multi-hop bottleneck)
+        beta = tuple(1.0 / (200e9 / max(h, 1) ** 1.0)
+                     for h in range(r.num_levels))
+        m = T.CommModel(topo=r, alpha=(0.0,) * r.num_levels, beta=beta)
+        c = T.target_dispatch(m, tokens_sent=600.0)
+        np.testing.assert_allclose(c.sum(1), 600.0, rtol=1e-9)
+        np.testing.assert_allclose(c.sum(0), 600.0, rtol=1e-9)
+        # nearer hops carry proportionally more
+        assert c[0, 1] > c[0, 2] > c[0, 3]
+        assert c[0, 1] == pytest.approx(2 * c[0, 2], rel=1e-6)
+
+    def test_ratio_conservation_ring(self):
+        r = T.RingTopology(8)
+        beta = tuple(1.0 / (100e9 / max(h, 1))
+                     for h in range(r.num_levels))
+        m = T.CommModel(topo=r, alpha=(0.0,) * r.num_levels, beta=beta)
+        ratios = T.per_level_ratios(m)
+        n = r.level_sizes()
+        assert float((ratios * n).sum()) == pytest.approx(8.0)
+
+
+class TestCapacityProperties:
+    @given(tokens=st.integers(8192, 65536), experts=st.sampled_from([16, 32, 64, 160]),
+           k=st.integers(1, 6), pods=st.sampled_from([1, 2]),
+           epp=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_plan_invariants(self, tokens, experts, k, pods, epp):
+        """TA plans never increase total send volume vs even, and the
+        near/far split respects the beta ratio within rounding."""
+        if experts % (pods * epp) != 0:
+            return
+        pe = C.make_plan(tokens_per_device=tokens, num_experts=experts,
+                         top_k=k, capacity_factor=1.25, num_pods=pods,
+                         ep_per_pod=epp, mode="even", round_multiple=1)
+        pt = C.make_plan(tokens_per_device=tokens, num_experts=experts,
+                         top_k=k, capacity_factor=1.25, num_pods=pods,
+                         ep_per_pod=epp, mode="ta", round_multiple=1)
+        assert pt.cap_near >= 1 and pe.cap_near >= 1
+        if pods == 1:
+            assert pt.cap_near == pe.cap_near
+        elif pe.cap_far > 8:   # above the rounding floor
+            assert pt.cap_near > pe.cap_near          # near gets more
+            assert pt.cap_far < pe.cap_far            # far gets less
+            # total sent volume conserved (Eq. 3), within integer rounding
+            n_near, n_far = epp, (pods - 1) * epp
+            tot_t = pt.cap_near * n_near + pt.cap_far * n_far
+            tot_e = pe.cap_near * n_near + pe.cap_far * n_far
+            assert abs(tot_t - tot_e) / tot_e < 0.05
