@@ -9,8 +9,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
 
 from repro.core import gating, moe as moe_lib
 from repro.core.capacity import make_plan
@@ -31,8 +32,7 @@ def _layer_stats(fn, *args):
 
 
 def run(T=512, D=128, F=256, N=16, K=2):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
                             capacity_factor=1.25, dtype=jnp.float32)
     ep = moe_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,

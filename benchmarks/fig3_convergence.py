@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs.base import RunConfig, get_config
 from repro.core import gating, topology
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -35,8 +36,7 @@ def _val_loss(arch, params, ctx, steps=2, seed=777):
 
 
 def run(steps=60, experts=(4,)):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rows = []
     base = get_config("gpt3_medium_moe").reduced()
     # heterogeneous penalties of the 2-pod production topology

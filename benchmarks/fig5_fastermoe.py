@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs.base import RunConfig, get_config
 from repro.training import trainer
 from benchmarks.fig4_throughput import _cluster, _t_a2a, TOKENS_PER_GPU
@@ -32,8 +33,7 @@ def _sim_step_time(mode: str, E=32):
 
 
 def run(steps=60):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_config("gpt3_medium_moe").reduced()
     run_cfg = RunConfig(seq_len=32, global_batch=8, learning_rate=1e-3,
                         total_steps=steps, warmup_steps=5)

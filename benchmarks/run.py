@@ -19,7 +19,7 @@ def main() -> None:
 
     from benchmarks import (ablation_dispatch, fig3_convergence,
                             fig4_throughput, fig5_fastermoe, fig6_dispatch,
-                            roofline, table1_comm)
+                            fig_overlap, roofline, table1_comm)
 
     suites = {
         "table1": lambda: table1_comm.run(),
@@ -29,6 +29,7 @@ def main() -> None:
         "fig5": lambda: fig5_fastermoe.run(steps=30 if args.quick else 60),
         "roofline": lambda: roofline.run(),
         "ablation": lambda: ablation_dispatch.run(),
+        "overlap": lambda: fig_overlap.run(),
     }
     sel = args.only or list(suites)
     rows = []

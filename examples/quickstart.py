@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
+from repro.compat import make_mesh
 from repro.configs.base import RunConfig, get_config
 from repro.core import topology
 from repro.models import model as model_lib
@@ -27,8 +28,7 @@ def main():
           "(= the ICI/DCI bandwidth ratio, Eq. 7 of the paper)\n")
 
     # 2. Train the paper's model (reduced) with the topology-aware loss.
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_config("gpt3_medium_moe").reduced()
     run = RunConfig(seq_len=64, global_batch=4, learning_rate=1e-3,
                     total_steps=20, warmup_steps=2, aux_mode="ta")

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
+from repro.compat import make_mesh
 from repro.configs.base import get_config
 from repro.models import model as model_lib
 from repro.serving import engine
@@ -26,8 +27,7 @@ def main():
     ap.add_argument("--cache-len", type=int, default=64)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_config(args.arch).reduced()
     print(f"serving {arch.name} ({arch.family}); "
           f"batch={args.batch} cache={args.cache_len}")

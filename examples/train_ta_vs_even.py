@@ -13,6 +13,7 @@ import dataclasses
 
 import jax
 
+from repro.compat import make_mesh
 from repro.configs.base import MoEArch, RunConfig, get_config
 from repro.training import trainer
 
@@ -38,8 +39,7 @@ def main():
     seq = 256 if args.full else 64
     batch = 8 if args.full else 4
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     arch = build_arch(args.full)
     run = RunConfig(seq_len=seq, global_batch=batch, learning_rate=6e-4,
                     total_steps=steps, warmup_steps=max(steps // 10, 1))

@@ -139,6 +139,10 @@ class RunConfig:
     seed: int = 0
     microbatch: int = 0           # 0 = no grad accumulation
     remat: bool = False
+    # MoE dispatch execution schedule: "a2a" (sync staged all-to-all) or
+    # "a2a_pipelined" (chunked comm–compute overlap, core/moe.py)
+    dispatch: str = "a2a"
+    a2a_num_chunks: int = 0       # 0 = auto-pick via core.comm_model
 
 
 ARCH_IDS = (

@@ -38,10 +38,20 @@ class CapacityPlan:
     cap_far: int                    # per-(src, expert) tokens, inter-pod (0 if single level)
     ratios: tuple                   # per-level multipliers from Eq. (7)
     mode: str                       # "even" | "ta" | "hir"
+    num_chunks: int = 1             # pipelined dispatch: chunks per capacity
 
     @property
     def is_hierarchical(self) -> bool:
         return self.cap_far > 0
+
+    @property
+    def chunk_near(self) -> int:
+        """Per-chunk near capacity (capacities are chunk-aligned)."""
+        return self.cap_near // self.num_chunks
+
+    @property
+    def chunk_far(self) -> int:
+        return self.cap_far // self.num_chunks
 
 
 def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
@@ -70,8 +80,10 @@ def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
     elif mode == "ta":
         # level 1 governs intra-pod targets, level 2 inter-pod.  Level 0
         # (self) is folded into the intra-pod stage: the self chunk never
-        # leaves the device, all_to_all keeps it local.
-        near = c_even * float(ratios[1])
+        # leaves the device, all_to_all keeps it local.  With a single
+        # device per pod level 1 has no members (its ratio is 0 by
+        # convention) and the near stage carries only self traffic.
+        near = c_even * float(ratios[1] if ep_per_pod > 1 else ratios[0])
         far = c_even * float(ratios[2]) if num_pods > 1 else 0.0
     elif mode == "hir":
         if num_pods == 1:
@@ -92,6 +104,24 @@ def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
                         experts_per_rank=experts_per_rank,
                         cap_near=cap_near, cap_far=cap_far,
                         ratios=tuple(float(r) for r in ratios), mode=mode)
+
+
+def align_to_chunks(plan: CapacityPlan, num_chunks: int) -> CapacityPlan:
+    """Round the plan's capacities up to multiples of ``num_chunks``.
+
+    The pipelined dispatch slices each capacity buffer into ``num_chunks``
+    equal static chunks per level; rounding *up* preserves losslessness (a
+    chunk-aligned plan never drops a token the unaligned plan kept — padding
+    slots ride along as zero-weight rows).  ``num_chunks == 1`` returns the
+    plan unchanged.
+    """
+    num_chunks = max(1, int(num_chunks))
+    if num_chunks == 1:
+        return dataclasses.replace(plan, num_chunks=1)
+    cap_near = _round_to(plan.cap_near, num_chunks)
+    cap_far = _round_to(plan.cap_far, num_chunks) if plan.cap_far else 0
+    return dataclasses.replace(plan, cap_near=cap_near, cap_far=cap_far,
+                               num_chunks=num_chunks)
 
 
 def a2a_bytes(plan: CapacityPlan, d_model: int, bytes_per_el: int,

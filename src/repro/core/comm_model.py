@@ -73,3 +73,100 @@ def dispatch_matrix_from_ratios(model: CommModel, tokens_per_device: float,
         assert c_hat is not None
         c = c_hat
     return c * d_bytes
+
+
+# ---------------------------------------------------------------------------
+# pipelined-dispatch overlap model (comm–compute overlap, core/moe.py
+# ``a2a_pipelined``)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapEstimate:
+    """Predicted step time of one MoE exchange+compute round."""
+
+    num_chunks: int
+    t_sync: float            # dispatch + GEMM + combine, fully serialized
+    t_pipelined: float       # 3-stage software pipeline over num_chunks
+    speedup: float
+
+    @property
+    def overlapped_fraction(self) -> float:
+        """Share of the sync exchange hidden behind compute (or vice versa)."""
+        return max(0.0, 1.0 - self.t_pipelined / max(self.t_sync, 1e-30))
+
+
+def pipelined_time(t_dispatch: float, t_compute: float, t_combine: float,
+                   num_chunks: int, alpha: float = 0.0) -> float:
+    """Latency of the 3-stage pipeline with per-chunk stage times.
+
+    Splitting a ``t``-second exchange into ``k`` chunks costs ``t/k + alpha``
+    per chunk (the latency term alpha is paid per collective, which is what
+    eventually stops chunking from helping); the pipeline fills in one pass
+    of all three stages and then drains at the bottleneck-stage rate.
+    """
+    k = max(1, int(num_chunks))
+    d = t_dispatch / k + alpha
+    g = t_compute / k
+    c = t_combine / k + alpha
+    return d + g + c + (k - 1) * max(d, g, c)
+
+
+def estimate_overlap(*, t_exchange: float, t_compute: float,
+                     alpha: float = 0.0,
+                     num_chunks: int) -> OverlapEstimate:
+    """Sync vs pipelined step time for one chunk count.
+
+    ``t_exchange`` is the one-way (dispatch) exchange time; combine moves
+    the same bytes back, so it gets the same cost.
+    """
+    t_sync = 2.0 * (t_exchange + alpha) + t_compute
+    t_pipe = pipelined_time(t_exchange, t_compute, t_exchange,
+                            num_chunks, alpha=alpha)
+    return OverlapEstimate(num_chunks=int(num_chunks), t_sync=t_sync,
+                           t_pipelined=t_pipe,
+                           speedup=t_sync / max(t_pipe, 1e-30))
+
+
+def choose_num_chunks(*, t_exchange: float, t_compute: float,
+                      alpha: float = 0.0,
+                      candidates=(1, 2, 4, 8)) -> int:
+    """Chunk count minimizing the predicted pipelined step time.
+
+    With alpha = 0 more chunks always help (asymptotically hiding the
+    smaller of exchange and compute entirely); a realistic per-collective
+    alpha makes this a genuine optimum rather than max(candidates).
+    """
+    best = min(candidates,
+               key=lambda k: pipelined_time(t_exchange, t_compute,
+                                            t_exchange, k, alpha=alpha))
+    return int(best)
+
+
+def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
+                      num_pods: int, ep_per_pod: int,
+                      activation: str = "swiglu",
+                      peak_flops: float = 197e12) -> dict:
+    """Alpha-beta inputs for the overlap model from a capacity plan.
+
+    Exchange time charges each level's send bytes against its link
+    bandwidth (the two stages share the per-device NIC, so they are summed
+    — the conservative serialization the contention model also assumes);
+    compute time is the grouped expert FFN's FLOPs at peak.
+    """
+    from repro.core import topology as topo_lib
+    from repro.core.capacity import a2a_bytes
+
+    b = a2a_bytes(plan, d_model, bytes_per_el, num_pods, ep_per_pod)
+    t_exchange = (b["near_bytes"] / topo_lib.ICI_BW
+                  + b["far_bytes"] / topo_lib.DCI_BW)
+    # expert rows this rank computes per layer: every (src rank, expert,
+    # capacity slot) lands exactly one row
+    rows = plan.cap_near * plan.experts_per_rank * ep_per_pod
+    if plan.cap_far:
+        rows += plan.cap_far * plan.experts_per_rank * num_pods * ep_per_pod
+    n_mats = 3 if activation == "swiglu" else 2
+    flops = 2.0 * rows * d_model * d_ff * n_mats
+    alpha = topo_lib.DCI_ALPHA if num_pods > 1 else topo_lib.ICI_ALPHA
+    return {"t_exchange": t_exchange, "t_compute": flops / peak_flops,
+            "alpha": alpha}

@@ -9,6 +9,15 @@ The layer body runs INSIDE ``shard_map`` over the expert-parallel mesh axes
   inter-pod over ``pod`` then ``data`` (capacity ``cap_far``).  With
   ``cap_near == cap_far`` this is exactly the DeepSpeed-MoE/FastMoE even
   dispatch baseline; with Eq. (7) capacities it is TA-MoE.
+* ``a2a_pipelined`` — same routing and capacities as ``a2a``, but the
+  per-level capacity buffers are split into ``num_chunks`` static chunks
+  along the capacity axis and the three stages (dispatch exchange, expert
+  GEMM, combine exchange) are software-pipelined: while chunk *k* is being
+  exchanged, chunk *k-1* runs its expert FFN and chunk *k-2* runs its
+  combine.  The chunks carry disjoint capacity slices, so the dependency
+  graph lets XLA's async collective scheduler overlap the slow inter-pod
+  exchange with expert compute (MoNTA / FasterMoE-style comm–compute
+  overlap) while the output stays allclose to ``a2a`` at equal capacities.
 * ``gather`` — decode: token counts are tiny, so experts stay put and tokens
   are (all-)gathered; each rank computes its local experts on all tokens,
   masked by the routing, and a ``psum`` over the EP axes combines.  This is
@@ -132,15 +141,19 @@ def _act(cfg, xin, params):
     return h
 
 
-def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec):
+def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
+               chunk_granular: bool = False):
     """Grouped expert FFN on [E_local, C, d] -> [E_local, C, d].
 
     d_ff is sharded over the model axis; the output psum happens here so the
-    caller sees full activations.
+    caller sees full activations.  ``chunk_granular`` routes through the
+    row-padding kernel entry sized for pipelined-dispatch chunk slices.
     """
     if cfg.use_kernel:
         from repro.kernels.moe_gemm import ops as moe_gemm_ops
-        y = moe_gemm_ops.grouped_ffn(
+        ffn = (moe_gemm_ops.grouped_ffn_chunk if chunk_granular
+               else moe_gemm_ops.grouped_ffn)
+        y = ffn(
             xin, params["w_in"],
             params.get("w_gate"), params["w_out"],
             activation=cfg.activation)
@@ -206,10 +219,16 @@ def _select(score_rows, x, cap: int):
     return w, idx, valid, buf
 
 
-def moe_apply_a2a(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
-                  gate_cfg: gating.GateConfig):
-    """x: [T_local, d] inside shard_map. Returns (y, metrics)."""
-    T, d = x.shape
+def _route(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
+           gate_cfg: gating.GateConfig):
+    """Gating + per-level token selection for the a2a paths.
+
+    Returns ``(near, far, gate_out, aux, levels)`` where ``near``/``far`` are
+    ``(w, idx, valid, buf)`` selection tuples with capacity axes 2 / 3
+    respectively (``far`` is None on single-pod meshes).  Both the sync and
+    the pipelined dispatch run this identical routing, which is what makes
+    their outputs equivalent at matched capacities.
+    """
     P1 = ep.ep_per_pod
     E_l = plan.experts_per_rank
     n_pods = ep.num_pods
@@ -225,17 +244,12 @@ def moe_apply_a2a(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
 
     score = _score_matrix(gate_out, cfg.num_experts)  # [N, T]
 
-    # ---- near stage: experts of my own pod, over the data axis ----
+    # near: experts of my own pod, delivered over the data axis
     near_rank = my_pod * P1 + jnp.arange(P1)                       # [P1]
     near_eids = near_rank[:, None] * E_l + jnp.arange(E_l)         # [P1, E_l]
     s_near = jnp.take(score, near_eids, axis=0)                    # [P1, E_l, T]
-    w_near, i_near, v_near, buf_near = _select(s_near, x, plan.cap_near)
-    recv_near = _a2a(buf_near, ep.data_axis, split_axis=0, concat_axis=0,
-                     wire_dtype=cfg.a2a_dtype)
-    xin = recv_near.reshape(P1, E_l, -1, d).transpose(1, 0, 2, 3)
-    xin = xin.reshape(E_l, -1, d)                                  # [E_l, P1*Cn, d]
+    near = _select(s_near, x, plan.cap_near)
 
-    # ---- far stage: experts of other pods, pod a2a then data a2a ----
     far = None
     if multipod and plan.cap_far > 0:
         all_rank = (jnp.arange(n_pods)[:, None] * P1
@@ -244,55 +258,225 @@ def moe_apply_a2a(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
         s_far = jnp.take(score, far_eids, axis=0)                   # [Q, P1, E_l, T]
         own = (jnp.arange(n_pods) == my_pod)[:, None, None, None]
         s_far = jnp.where(own, -1.0, s_far)  # own pod handled by near stage
-        w_far, i_far, v_far, buf_far = _select(s_far, x, plan.cap_far)
-        # pod exchange: slice [q] -> pod q (carries tokens for (q, *) ranks)
-        t = _a2a(buf_far, ep.pod_axis, split_axis=0, concat_axis=0,
-                 wire_dtype=cfg.a2a_dtype)
-        # deliver within pod: axis 1 is the destination data index
-        t = _a2a(t, ep.data_axis, split_axis=1, concat_axis=1,
-                 wire_dtype=cfg.a2a_dtype)
-        # t[q, s]: tokens from rank (q, s) for my experts
-        xin_far = t.transpose(2, 0, 1, 3, 4).reshape(E_l, -1, d)
-        far = (w_far, i_far, v_far)
-        xin = jnp.concatenate([xin, xin_far], axis=1)               # [E_l, R, d]
+        far = _select(s_far, x, plan.cap_far)
+    return near, far, gate_out, aux, levels
 
-    # ---- expert compute ----
-    y_exp = expert_ffn(params, xin, cfg, ep)                        # [E_l, R, d]
 
-    # ---- reverse + combine ----
-    Cn = buf_near.shape[2]
-    y_near = y_exp[:, : P1 * Cn].reshape(E_l, P1, Cn, d).transpose(1, 0, 2, 3)
-    back_near = _a2a(y_near, ep.data_axis, split_axis=0, concat_axis=0,
-                     wire_dtype=cfg.a2a_dtype)
-    out = jnp.zeros((T, d), y_exp.dtype)
-    wgt = (w_near * v_near).astype(y_exp.dtype)
-    out = out.at[i_near].add(back_near * wgt[..., None])
+def _dispatch_near(buf, cfg: MoEConfig, ep: EPSpec):
+    """[P1, E_l, C, d] local buffer -> [E_l, P1*C, d] expert rows."""
+    P1, E_l, C, d = buf.shape
+    recv = _a2a(buf, ep.data_axis, split_axis=0, concat_axis=0,
+                wire_dtype=cfg.a2a_dtype)
+    return recv.transpose(1, 0, 2, 3).reshape(E_l, P1 * C, d)
 
-    if far is not None:
-        w_far, i_far, v_far = far
-        Cf = i_far.shape[-1]
-        y_far = y_exp[:, P1 * Cn:].reshape(E_l, n_pods, P1, Cf, d)
-        y_far = y_far.transpose(1, 2, 0, 3, 4)                      # [Q, P1, E_l, Cf, d]
-        y_far = _a2a(y_far, ep.data_axis, split_axis=1, concat_axis=1,
-                     wire_dtype=cfg.a2a_dtype)
-        back_far = _a2a(y_far, ep.pod_axis, split_axis=0, concat_axis=0,
-                        wire_dtype=cfg.a2a_dtype)
-        wf = (w_far * v_far).astype(y_exp.dtype)
-        out = out.at[i_far].add(back_far * wf[..., None])
 
-    if cfg.num_shared_experts:
-        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
+def _dispatch_far(buf, cfg: MoEConfig, ep: EPSpec):
+    """[Q, P1, E_l, C, d] local buffer -> [E_l, Q*P1*C, d] expert rows."""
+    Q, P1, E_l, C, d = buf.shape
+    # pod exchange: slice [q] -> pod q (carries tokens for (q, *) ranks)
+    t = _a2a(buf, ep.pod_axis, split_axis=0, concat_axis=0,
+             wire_dtype=cfg.a2a_dtype)
+    # deliver within pod: axis 1 is the destination data index
+    t = _a2a(t, ep.data_axis, split_axis=1, concat_axis=1,
+             wire_dtype=cfg.a2a_dtype)
+    # t[q, s]: tokens from rank (q, s) for my experts
+    return t.transpose(2, 0, 1, 3, 4).reshape(E_l, Q * P1 * C, d)
 
-    # metrics: per-level dispatched token counts (for Fig 6b / Fig 7)
+
+def _combine_near(y, P1: int, cfg: MoEConfig, ep: EPSpec):
+    """[E_l, P1*C, d] expert outputs -> [P1, E_l, C, d] back at the source."""
+    E_l, R, d = y.shape
+    y = y.reshape(E_l, P1, R // P1, d).transpose(1, 0, 2, 3)
+    return _a2a(y, ep.data_axis, split_axis=0, concat_axis=0,
+                wire_dtype=cfg.a2a_dtype)
+
+
+def _combine_far(y, n_pods: int, P1: int, cfg: MoEConfig, ep: EPSpec):
+    """[E_l, Q*P1*C, d] expert outputs -> [Q, P1, E_l, C, d] at the source."""
+    E_l, R, d = y.shape
+    y = y.reshape(E_l, n_pods, P1, R // (n_pods * P1), d)
+    y = y.transpose(1, 2, 0, 3, 4)                       # [Q, P1, E_l, C, d]
+    y = _a2a(y, ep.data_axis, split_axis=1, concat_axis=1,
+             wire_dtype=cfg.a2a_dtype)
+    return _a2a(y, ep.pod_axis, split_axis=0, concat_axis=0,
+                wire_dtype=cfg.a2a_dtype)
+
+
+def _a2a_metrics(gate_out, aux, levels, v_near, T: int, cfg: MoEConfig,
+                 gate_cfg: gating.GateConfig):
+    """Per-level dispatched token counts (for Fig 6b / Fig 7)."""
     frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
     lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
-    metrics = {
+    return {
         "aux_loss": aux,
         "frac_near": lvl1,
         "frac_far": 1.0 - lvl1,
         "dropped": 1.0 - jnp.minimum(
             v_near.sum() / (T * gate_cfg.top_k), 1.0),
     }
+
+
+def moe_apply_a2a(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
+                  gate_cfg: gating.GateConfig):
+    """x: [T_local, d] inside shard_map. Returns (y, metrics)."""
+    T, d = x.shape
+    P1 = ep.ep_per_pod
+    n_pods = ep.num_pods
+
+    near, far, gate_out, aux, levels = _route(params, x, cfg, ep, plan,
+                                              gate_cfg)
+    w_near, i_near, v_near, buf_near = near
+    Cn = buf_near.shape[2]
+    xin = _dispatch_near(buf_near, cfg, ep)                # [E_l, P1*Cn, d]
+    if far is not None:
+        xin = jnp.concatenate([xin, _dispatch_far(far[3], cfg, ep)], axis=1)
+
+    # ---- expert compute ----
+    y_exp = expert_ffn(params, xin, cfg, ep)               # [E_l, R, d]
+
+    # ---- reverse + combine ----
+    back_near = _combine_near(y_exp[:, : P1 * Cn], P1, cfg, ep)
+    out = jnp.zeros((T, d), y_exp.dtype)
+    wgt = (w_near * v_near).astype(y_exp.dtype)
+    out = out.at[i_near].add(back_near * wgt[..., None])
+
+    if far is not None:
+        w_far, i_far, v_far, _ = far
+        back_far = _combine_far(y_exp[:, P1 * Cn:], n_pods, P1, cfg, ep)
+        wf = (w_far * v_far).astype(y_exp.dtype)
+        out = out.at[i_far].add(back_far * wf[..., None])
+
+    if cfg.num_shared_experts:
+        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
+
+    metrics = _a2a_metrics(gate_out, aux, levels, v_near, T, cfg, gate_cfg)
+    return out.astype(x.dtype), metrics
+
+
+# ---------------------------------------------------------------------------
+# pipelined a2a dispatch (comm–compute overlap)
+# ---------------------------------------------------------------------------
+
+
+def software_pipeline(num_chunks: int, dispatch, compute, combine, carry):
+    """Unrolled 3-stage software pipeline over ``num_chunks`` chunks.
+
+    At pipeline tick ``t`` this issues, in order: the dispatch of chunk
+    ``t`` (first, so its exchange is in flight as early as possible), the
+    compute of chunk ``t-1``, and the combine of chunk ``t-2``.  The three
+    live chunks are mutually independent, so a backend with async
+    collectives can run chunk ``t``'s exchange concurrently with chunk
+    ``t-1``'s GEMM and chunk ``t-2``'s reverse exchange; the double-buffer
+    working set (one in-flight dispatch + one in-flight compute) has
+    non-overlapping lifetimes that XLA's buffer assignment reuses in place.
+
+    This scheduling skeleton is deliberately generic — later async features
+    (shadowed experts, quantized-a2a overlap, decode batching) can reuse it
+    by swapping the stage callables.
+
+    ``dispatch(j)`` produces chunk ``j``'s in-flight value, ``compute(j, v)``
+    transforms it, and ``combine(carry, j, v)`` folds it into ``carry``.
+    """
+    in_dispatch = None            # (j, dispatched chunk j)
+    in_compute = None             # (j, computed chunk j)
+    for t in range(num_chunks + 2):
+        nxt = (t, dispatch(t)) if t < num_chunks else None
+        cmp = (in_dispatch[0], compute(*in_dispatch)) \
+            if in_dispatch is not None else None
+        if in_compute is not None:
+            carry = combine(carry, *in_compute)
+        in_dispatch, in_compute = nxt, cmp
+    return carry
+
+
+def _pad_selection(sel, axis: int, multiple: int):
+    """Zero-pad a ``(w, idx, valid, buf)`` selection's capacity axis up to a
+    multiple of ``multiple``.
+
+    Padded slots carry ``valid == 0`` and ``idx == 0``: their FFN output is
+    exactly zero (no biases anywhere in the expert FFN) and their combine
+    weight is zero, so they contribute nothing — this keeps every chunk
+    equal-split per level even when the plan capacity was clamped to the
+    local token count.
+    """
+    w, idx, valid, buf = sel
+    pad = (-w.shape[axis]) % multiple
+    if pad == 0:
+        return sel
+
+    def _pad(a):
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+    return _pad(w), _pad(idx), _pad(valid), _pad(buf)
+
+
+def moe_apply_a2a_pipelined(params, x, cfg: MoEConfig, ep: EPSpec,
+                            plan: CapacityPlan,
+                            gate_cfg: gating.GateConfig,
+                            num_chunks: int = 2):
+    """Chunked, software-pipelined variant of :func:`moe_apply_a2a`.
+
+    Routing, capacities and combine weights are identical to ``a2a``; only
+    the execution schedule differs, so the output is allclose to the sync
+    path (the per-token accumulation order over chunks may differ in the
+    last ulp).  ``num_chunks == 1`` degenerates to the sync schedule.
+    """
+    T, d = x.shape
+    P1 = ep.ep_per_pod
+    n_pods = ep.num_pods
+
+    near, far, gate_out, aux, levels = _route(params, x, cfg, ep, plan,
+                                              gate_cfg)
+    v_near_unpadded = near[2]
+    num_chunks = max(1, int(num_chunks))
+    near = _pad_selection(near, axis=2, multiple=num_chunks)
+    w_near, i_near, v_near, buf_near = near
+    cn = buf_near.shape[2] // num_chunks          # per-chunk near capacity
+    cf = 0
+    if far is not None:
+        far = _pad_selection(far, axis=3, multiple=num_chunks)
+        cf = far[3].shape[3] // num_chunks        # per-chunk far capacity
+
+    def dispatch(j):
+        xin = _dispatch_near(
+            jax.lax.slice_in_dim(buf_near, j * cn, (j + 1) * cn, axis=2),
+            cfg, ep)
+        if far is not None:
+            xin_far = _dispatch_far(
+                jax.lax.slice_in_dim(far[3], j * cf, (j + 1) * cf, axis=3),
+                cfg, ep)
+            xin = jnp.concatenate([xin, xin_far], axis=1)
+        return xin
+
+    def compute(j, xin):
+        # [E_l, P1*cn + Q*P1*cf, d]
+        return expert_ffn(params, xin, cfg, ep, chunk_granular=True)
+
+    def combine(out, j, y_exp):
+        if out is None:
+            out = jnp.zeros((T, d), y_exp.dtype)
+        back = _combine_near(y_exp[:, : P1 * cn], P1, cfg, ep)
+        sl = slice(j * cn, (j + 1) * cn)
+        wgt = (w_near[:, :, sl] * v_near[:, :, sl]).astype(y_exp.dtype)
+        out = out.at[i_near[:, :, sl]].add(back * wgt[..., None])
+        if far is not None:
+            w_far, i_far, v_far, _ = far
+            back_far = _combine_far(y_exp[:, P1 * cn:], n_pods, P1, cfg, ep)
+            slf = slice(j * cf, (j + 1) * cf)
+            wf = (w_far[..., slf] * v_far[..., slf]).astype(y_exp.dtype)
+            out = out.at[i_far[..., slf]].add(back_far * wf[..., None])
+        return out
+
+    out = software_pipeline(num_chunks, dispatch, compute, combine, None)
+
+    if cfg.num_shared_experts:
+        # independent of every chunk: another overlap opportunity for the
+        # scheduler, issued after the pipeline drains.
+        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
+
+    metrics = _a2a_metrics(gate_out, aux, levels, v_near_unpadded, T, cfg,
+                           gate_cfg)
     return out.astype(x.dtype), metrics
 
 

@@ -27,3 +27,28 @@ def grouped_ffn(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
         return grouped_ffn_pallas(x, w_in, w_gate, w_out,
                                   activation=activation, interpret=True)
     return _ref_jit(x, w_in, w_gate, w_out, activation)
+
+
+def grouped_ffn_chunk(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
+                      row_align: int = 128):
+    """Chunk-granular grouped FFN for the pipelined dispatch path.
+
+    The pipelined a2a splits the capacity axis into chunks, so per-call row
+    counts are ``cap/num_chunks`` slices that are usually *not* multiples of
+    the MXU tile.  This entry pads the row axis up to ``row_align`` (the MXU
+    systolic width; zero rows produce zero outputs in a bias-free FFN)
+    before hitting the Pallas kernel and slices the result back, keeping
+    every chunk GEMM on the fast aligned path instead of falling into a
+    ragged tail block per chunk.
+    """
+    import jax.numpy as jnp
+
+    E, C, d = x.shape
+    pad = (-C) % row_align
+    if pad:
+        # zero rows produce zero outputs in the bias-free FFN on every
+        # backend, so the pad path runs (and is tested) everywhere
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return grouped_ffn(xp, w_in, w_gate, w_out,
+                           activation=activation)[:, :C]
+    return grouped_ffn(x, w_in, w_gate, w_out, activation=activation)

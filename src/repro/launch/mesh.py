@@ -3,20 +3,21 @@
 Defined as functions (never module-level constants) so importing this module
 never touches JAX device state — critical because the dry-run must set
 XLA_FLAGS before the first device query.
+
+All meshes go through :func:`repro.compat.make_mesh`, which papers over the
+``axis_types`` kwarg that only exists on jax >= 0.5.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pods: int = 0):
@@ -25,6 +26,4 @@ def make_host_mesh(data: int = 1, model: int = 1, pods: int = 0):
         shape, axes = (pods, data, model), ("pod", "data", "model")
     else:
         shape, axes = (data, model), ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

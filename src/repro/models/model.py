@@ -77,20 +77,44 @@ def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
         aux_mode=aux_mode, penalty_by_level=penalties)
 
 
+def resolve_num_chunks(arch: ArchConfig, plan, ep,
+                       num_chunks: int = 0) -> int:
+    """Chunk count for pipelined dispatch; 0 = pick via the overlap model."""
+    if num_chunks > 0:
+        return int(num_chunks)
+    from repro.core import comm_model
+    terms = comm_model.moe_overlap_terms(
+        plan, d_model=arch.d_model, d_ff=arch.moe.d_ff_expert,
+        bytes_per_el=2 if arch.jnp_dtype == jnp.bfloat16 else 4,
+        num_pods=ep.num_pods, ep_per_pod=ep.ep_per_pod,
+        activation=arch.activation)
+    return comm_model.choose_num_chunks(**terms)
+
+
 def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
               aux_mode: str = "ta", remat: bool = False,
               decode_replicated: bool = False,
               use_flash: bool = False,
-              use_moe_kernel: bool = False) -> transformer.ModelCtx:
+              use_moe_kernel: bool = False,
+              dispatch: str = "a2a",
+              a2a_num_chunks: int = 0) -> transformer.ModelCtx:
+    if dispatch not in ("a2a", "a2a_pipelined"):
+        raise ValueError(f"unknown dispatch {dispatch!r}; "
+                         "expected 'a2a' or 'a2a_pipelined'")
     dispatch_mode = {"lb": "even", "even": "even", "ta": "ta",
                      "hir": "hir", "none": "even"}[aux_mode]
     plan = make_plan(arch, mesh, seq_len, global_batch, dispatch_mode)
     ep = make_ep_spec(arch, mesh)
     gate_cfg = make_gate_cfg(arch, plan, ep, aux_mode)
+    num_chunks = 1
+    if plan is not None and dispatch == "a2a_pipelined":
+        num_chunks = resolve_num_chunks(arch, plan, ep, a2a_num_chunks)
+        plan = capacity.align_to_chunks(plan, num_chunks)
     return transformer.ModelCtx(
         arch=arch, mesh=mesh, ep=ep, plan=plan, gate_cfg=gate_cfg,
         remat=remat, decode_replicated=decode_replicated,
-        use_flash=use_flash, use_moe_kernel=use_moe_kernel)
+        use_flash=use_flash, use_moe_kernel=use_moe_kernel,
+        dispatch=dispatch, a2a_num_chunks=num_chunks)
 
 
 # ---------------------------------------------------------------------------

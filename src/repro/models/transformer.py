@@ -51,6 +51,8 @@ class ModelCtx:
     use_moe_kernel: bool = False
     remat: bool = False
     decode_replicated: bool = False              # long_500k batch=1
+    dispatch: str = "a2a"                        # "a2a" | "a2a_pipelined"
+    a2a_num_chunks: int = 1                      # resolved by build_ctx
     # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
     use_blockwise: bool = False                  # flash-style attention HLO
     fused_xent: bool = False                     # vocab-sharded xent
@@ -234,7 +236,8 @@ def _tree_specs_default(tree, special: dict):
 def _moe_block(p, x, ctx: ModelCtx, decode: bool):
     """x: [B, S, d] (global view). Returns (y, metrics)."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     ep, cfg, gate_cfg = ctx.ep, ctx.moe_cfg, ctx.gate_cfg
     mesh = ctx.mesh
@@ -249,6 +252,10 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool):
             y, metrics = moe_lib.moe_apply_gather(
                 p_local, xt, cfg, ep, gate_cfg,
                 tokens_replicated=replicated)
+        elif ctx.dispatch == "a2a_pipelined":
+            y, metrics = moe_lib.moe_apply_a2a_pipelined(
+                p_local, xt, cfg, ep, ctx.plan, gate_cfg,
+                num_chunks=max(1, ctx.a2a_num_chunks))
         else:
             y, metrics = moe_lib.moe_apply_a2a(
                 p_local, xt, cfg, ep, ctx.plan, gate_cfg)

@@ -102,7 +102,9 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
     aux_mode = aux_mode or run.aux_mode
     ctx = model_lib.build_ctx(arch, mesh, seq_len=run.seq_len,
                               global_batch=run.global_batch,
-                              aux_mode=aux_mode, remat=run.remat)
+                              aux_mode=aux_mode, remat=run.remat,
+                              dispatch=run.dispatch,
+                              a2a_num_chunks=run.a2a_num_chunks)
     rules = model_lib.default_rules(mesh)
     key = jax.random.PRNGKey(run.seed)
     with mesh, sharding.axis_rules(rules):

@@ -1,0 +1,78 @@
+"""Minimal deterministic stand-in for the hypothesis API this suite uses.
+
+CI installs real hypothesis (requirements-dev.txt) and these shims are never
+imported.  On machines where hypothesis is unavailable the property tests
+still run, against a fixed pseudo-random sample of each strategy instead of
+hypothesis's adaptive search — strictly weaker shrinking/coverage, but the
+same assertions over dozens of drawn examples, and collection never dies on
+the import.
+
+Supported surface: ``given`` (positional or keyword strategies), ``settings``
+(``max_examples`` honoured, ``deadline`` ignored), and the ``strategies``
+members ``integers``, ``floats``, ``sampled_from``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import itertools
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        n_examples = getattr(fn, "_fallback_max_examples",
+                             _DEFAULT_MAX_EXAMPLES)
+        params = [p for p in inspect.signature(fn).parameters
+                  if p != "self"]
+        bound_kw = dict(zip(params, pos_strategies))
+        bound_kw.update(kw_strategies)
+
+        def wrapper(*args):
+            # args is () for module-level tests, (self,) for methods; any
+            # strategy-bound parameter is filled here, so pytest sees a
+            # zero-fixture signature exactly as with real hypothesis.
+            rng = np.random.default_rng(0)
+            for _ in range(n_examples):
+                drawn = {k: s.example(rng) for k, s in bound_kw.items()}
+                fn(*args, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -6,11 +6,12 @@ only ever exist inside repro.launch.dryrun."""
 import jax
 import pytest
 
+from repro.compat import make_mesh
+
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

@@ -46,8 +46,9 @@ def _dense_reference(params, x, cfg, gate_cfg):
 
 
 def _run_shardmap(fn, mesh, params, x):
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     body = shard_map(fn, mesh=mesh, in_specs=(P(), P()),
                      out_specs=(P(), P()), check_vma=False)
     return body(params, x)

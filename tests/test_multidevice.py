@@ -30,13 +30,12 @@ def test_a2a_dispatch_matches_dense_across_ranks():
     """4-rank EP (2 pods x 2): hierarchical a2a output == dense reference."""
     out = _run(4, """
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.core import gating, moe as moe_lib
         from repro.core.capacity import make_plan
 
-        mesh = jax.make_mesh((2, 2), ("pod", "data"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 2), ("pod", "data"))
         D, F, N, K, T = 16, 32, 8, 2, 32   # T per rank
         cfg = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
                                 capacity_factor=8.0, dtype=jnp.float32)
@@ -80,6 +79,68 @@ def test_a2a_dispatch_matches_dense_across_ranks():
 
 
 @pytest.mark.slow
+def test_pipelined_matches_a2a_across_ranks():
+    """4-rank EP (2 pods x 2): the chunked comm–compute-overlap schedule
+    must be allclose to the sync a2a path at matched capacities, for every
+    chunk count, including the TA (hierarchical near/far) plan."""
+    out = _run(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import capacity, gating, moe as moe_lib
+
+        mesh = make_mesh((2, 2), ("pod", "data"))
+        D, F, N, K, T = 16, 32, 8, 2, 32   # T per rank
+        cfg = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+                                capacity_factor=4.0, dtype=jnp.float32)
+        ep = moe_lib.EPSpec(num_pods=2, ep_per_pod=2, pod_axis="pod",
+                            data_axis="data", model_axis=None)
+        gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="ta")
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(0), cfg, ep,
+                                         gate_cfg)
+        plan = capacity.make_plan(tokens_per_device=T, num_experts=N,
+                                  top_k=K, capacity_factor=4.0, num_pods=2,
+                                  ep_per_pod=2, mode="ta", round_multiple=1)
+        assert plan.cap_far > 0   # exercise both exchange levels
+        x = jax.random.normal(jax.random.PRNGKey(1), (4 * T, D), jnp.float32)
+        pspecs = {"gate": {"w": P()},
+                  "w_in": P(("pod", "data"), None, None),
+                  "w_gate": P(("pod", "data"), None, None),
+                  "w_out": P(("pod", "data"), None, None)}
+
+        def run(body):
+            fn = shard_map(body, mesh=mesh,
+                           in_specs=(pspecs, P(("pod", "data"), None)),
+                           out_specs=P(("pod", "data"), None),
+                           check_vma=False)
+            with mesh:
+                return fn(params, x)
+
+        y0 = run(lambda p, xx: moe_lib.moe_apply_a2a(
+            p, xx, cfg, ep, plan, gate_cfg)[0])
+        for k in (1, 2, 3, 4):
+            # matched capacities: sync and pipelined on the aligned plan
+            pk = capacity.align_to_chunks(plan, k)
+            ys = run(lambda p, xx, pk=pk: moe_lib.moe_apply_a2a(
+                p, xx, cfg, ep, pk, gate_cfg)[0])
+            yp = run(lambda p, xx, pk=pk, kk=k:
+                     moe_lib.moe_apply_a2a_pipelined(
+                         p, xx, cfg, ep, pk, gate_cfg, num_chunks=kk)[0])
+            err = float(jnp.abs(yp - ys).max())
+            print("CHUNKS", k, "ERR", err)
+            assert err < 1e-4, (k, err)
+        # unaligned plan: internal zero-padding must also reproduce sync
+        y3 = run(lambda p, xx: moe_lib.moe_apply_a2a_pipelined(
+            p, xx, cfg, ep, plan, gate_cfg, num_chunks=3)[0])
+        err = float(jnp.abs(y3 - y0).max())
+        print("PAD ERR", err)
+        assert err < 1e-4, err
+        print("PIPELINED-OK")
+    """)
+    assert "PIPELINED-OK" in out
+
+
+@pytest.mark.slow
 def test_ta_reduces_crosspod_bytes_vs_even():
     """On a (2,2,1) mesh the TA plan must shrink the far a2a buffers and
     therefore cross-pod wire bytes in the compiled HLO."""
@@ -92,8 +153,8 @@ def test_ta_reduces_crosspod_bytes_vs_even():
         from repro.launch import analysis
         from repro.optim import adamw
 
-        mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
         arch = get_config("gpt3_medium_moe").reduced()
         import dataclasses
         arch = dataclasses.replace(
@@ -134,11 +195,11 @@ def test_mini_dryrun_8dev():
         import repro.launch.dryrun as dr
         # monkeypatch production mesh to the mini mesh
         import repro.launch.mesh as mesh_lib
+        from repro.compat import make_mesh
         def mini(multi_pod=False):
             shape = (2, 2, 2) if multi_pod else (4, 2)
             axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-            return jax.make_mesh(shape, axes,
-                axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+            return make_mesh(shape, axes)
         dr.make_production_mesh = mini
         import dataclasses
         from repro.configs import base

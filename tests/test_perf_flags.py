@@ -109,8 +109,9 @@ def test_mamba_chunked_scan_matches():
 def test_quantized_a2a_close_to_exact(mesh11, key):
     from repro.core import gating, moe as moe_lib
     from repro.core.capacity import make_plan
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     D, F, N, K, T = 16, 32, 4, 2, 64
     ep = moe_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
                         data_axis="data", model_axis="model")

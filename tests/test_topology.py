@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover - CI has hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import topology as T
 from repro.core import capacity as C
