@@ -8,11 +8,6 @@ even *more* aggressive about slow links) but its gate bias damages the
 loss — TA reaches the target loss sooner, matching the paper's 1.25-1.54x.
 """
 
-import dataclasses
-import time
-
-import jax
-import numpy as np
 
 from repro.compat import make_mesh
 from repro.configs.base import RunConfig, get_config

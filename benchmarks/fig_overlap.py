@@ -104,8 +104,25 @@ def main(T=256, D=64, F=128, N=16, K=2):
                      f"sim_pipe_ms={est.t_pipelined*1e3:.4f};"
                      f"sim_speedup={est.speedup:.2f}"))
     auto = comm_model.choose_num_chunks(**terms)
-    print(f"# comm-model pick: num_chunks={auto}")
+    print(f"# comm-model pick (topology constants): num_chunks={auto}")
     rows.append(("fig_overlap_auto_chunks", float(auto), "model choice"))
+
+    # measured alpha/beta: micro-benchmark the actual mesh links and rerun
+    # the chunk chooser on the fitted terms (ROADMAP: profiled overlap model)
+    links = comm_model.measured_moe_links(mesh, data_axis="data",
+                                          pod_axis="pod")
+    mterms = comm_model.moe_overlap_terms(
+        base_plan, d_model=D, d_ff=F, bytes_per_el=4,
+        num_pods=2, ep_per_pod=4, links=links)
+    m_auto = comm_model.choose_num_chunks(**mterms)
+    for lvl in ("near", "far"):
+        li = links[lvl]
+        if li is not None:
+            print(f"# measured {lvl}: alpha={li.alpha*1e6:.1f}us "
+                  f"beta={li.beta*1e9:.3f}ns/B")
+    print(f"# comm-model pick (measured alpha/beta): num_chunks={m_auto}")
+    rows.append(("fig_overlap_auto_chunks_measured", float(m_auto),
+                 f"alpha_us={mterms['alpha']*1e6:.2f}"))
     for name, us, derived in rows:
         print(f"CSV {name},{us:.2f},{derived}")
     return rows

@@ -4,7 +4,6 @@ steps, and generate — all on CPU in under a minute.
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 
 from repro import sharding

@@ -11,7 +11,6 @@ CI-sized run:
 import argparse
 import dataclasses
 
-import jax
 
 from repro.compat import make_mesh
 from repro.configs.base import MoEArch, RunConfig, get_config

@@ -23,6 +23,12 @@ class MoEArch:
     moe_period: int = 1          # MoE FFN every `period` layers (1 = all)
     first_dense: int = 0         # leading layers keep a dense FFN
     capacity_factor: float = 1.25
+    # Per-layer dispatch override: tuple of (global_layer_idx, path_name)
+    # pairs, where path_name is any name in the core.dispatch engine
+    # registry ("a2a" | "a2a_pipelined" | "gather" | "einsum").  Layers not
+    # listed use the run-level RunConfig.dispatch default.  Run-level
+    # overrides (RunConfig.dispatch_override) win over arch-level ones.
+    dispatch_override: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,10 +145,15 @@ class RunConfig:
     seed: int = 0
     microbatch: int = 0           # 0 = no grad accumulation
     remat: bool = False
-    # MoE dispatch execution schedule: "a2a" (sync staged all-to-all) or
-    # "a2a_pipelined" (chunked comm–compute overlap, core/moe.py)
+    # MoE dispatch execution path, resolved through the core.dispatch
+    # engine registry: "a2a" (sync staged all-to-all), "a2a_pipelined"
+    # (chunked comm–compute overlap), "gather" (weights-stationary), or
+    # "einsum" (GShard baseline; single-rank only).
     dispatch: str = "a2a"
     a2a_num_chunks: int = 0       # 0 = auto-pick via core.comm_model
+    # per-layer (global_layer_idx, path_name) pairs; wins over
+    # MoEArch.dispatch_override for the same layer index.
+    dispatch_override: tuple = ()
 
 
 ARCH_IDS = (

@@ -11,8 +11,6 @@ from __future__ import annotations
 import dataclasses
 import math
 
-import numpy as np
-
 from repro.core import topology as topo_lib
 
 

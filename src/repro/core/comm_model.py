@@ -146,20 +146,30 @@ def choose_num_chunks(*, t_exchange: float, t_compute: float,
 def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
                       num_pods: int, ep_per_pod: int,
                       activation: str = "swiglu",
-                      peak_flops: float = 197e12) -> dict:
+                      peak_flops: float = 197e12,
+                      links: dict | None = None) -> dict:
     """Alpha-beta inputs for the overlap model from a capacity plan.
 
     Exchange time charges each level's send bytes against its link
     bandwidth (the two stages share the per-device NIC, so they are summed
     — the conservative serialization the contention model also assumes);
     compute time is the grouped expert FFN's FLOPs at peak.
+
+    ``links`` optionally carries measured :class:`LinkEstimate` objects
+    (keys ``"near"`` / ``"far"``, from :func:`measured_moe_links`); any
+    level without a measurement falls back to the ICI/DCI topology
+    constants.
     """
     from repro.core import topology as topo_lib
     from repro.core.capacity import a2a_bytes
 
+    links = links or {}
+    near_l, far_l = links.get("near"), links.get("far")
+    beta_near = near_l.beta if near_l else 1.0 / topo_lib.ICI_BW
+    beta_far = far_l.beta if far_l else 1.0 / topo_lib.DCI_BW
+
     b = a2a_bytes(plan, d_model, bytes_per_el, num_pods, ep_per_pod)
-    t_exchange = (b["near_bytes"] / topo_lib.ICI_BW
-                  + b["far_bytes"] / topo_lib.DCI_BW)
+    t_exchange = (b["near_bytes"] * beta_near + b["far_bytes"] * beta_far)
     # expert rows this rank computes per layer: every (src rank, expert,
     # capacity slot) lands exactly one row
     rows = plan.cap_near * plan.experts_per_rank * ep_per_pod
@@ -167,6 +177,103 @@ def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
         rows += plan.cap_far * plan.experts_per_rank * num_pods * ep_per_pod
     n_mats = 3 if activation == "swiglu" else 2
     flops = 2.0 * rows * d_model * d_ff * n_mats
-    alpha = topo_lib.DCI_ALPHA if num_pods > 1 else topo_lib.ICI_ALPHA
+    if num_pods > 1:
+        alpha = far_l.alpha if far_l else topo_lib.DCI_ALPHA
+    else:
+        alpha = near_l.alpha if near_l else topo_lib.ICI_ALPHA
     return {"t_exchange": t_exchange, "t_compute": flops / peak_flops,
             "alpha": alpha}
+
+
+# ---------------------------------------------------------------------------
+# measured alpha/beta (micro-benchmarked links)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkEstimate:
+    """Least-squares fit of ``t = alpha + beta * bytes`` for one mesh axis."""
+
+    alpha: float                  # s (per-collective latency)
+    beta: float                   # s/byte (inverse bandwidth)
+    nbytes: tuple = ()            # sampled per-device exchange sizes
+    times: tuple = ()             # matching measured times (s)
+
+    def predict(self, n: float) -> float:
+        return self.alpha + self.beta * n
+
+
+_LINK_CACHE: dict = {}
+
+
+def _mesh_key(mesh, axis_name: str, sizes_bytes, iters: int):
+    plat = mesh.devices.flat[0].platform if mesh.devices.size else "none"
+    return (plat, tuple(sorted(mesh.shape.items())), axis_name,
+            tuple(int(s) for s in sizes_bytes), int(iters))
+
+
+def measure_link(mesh, axis_name: str, *,
+                 sizes_bytes=(1 << 13, 1 << 16, 1 << 19),
+                 iters: int = 3) -> LinkEstimate:
+    """Micro-benchmark ``lax.all_to_all`` over one mesh axis and fit
+    ``t = alpha + beta * bytes_per_device``.
+
+    This replaces the ICI/DCI topology *constants* with numbers measured on
+    the mesh actually in use (ROADMAP open item: profiled alpha/beta for
+    the overlap model).  On forced-host-device meshes the collectives are
+    memcpys, so the fit reflects the host's true exchange cost — which is
+    exactly what a chunk-count decision on that mesh should use.  Results
+    are cached per (platform, mesh shape, axis).
+    """
+    key = _mesh_key(mesh, axis_name, sizes_bytes, iters)
+    if key in _LINK_CACHE:
+        return _LINK_CACHE[key]
+
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    n = mesh.shape[axis_name]
+    sizes, times = [], []
+    for nbytes in sizes_bytes:
+        w = max(1, int(nbytes) // (4 * n))
+
+        def body(a):
+            return jax.lax.all_to_all(a, axis_name, split_axis=0,
+                                      concat_axis=0, tiled=True)
+        fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(axis_name),
+                               out_specs=P(axis_name), check_vma=False))
+        xg = jnp.zeros((n * n, w), jnp.float32)
+        with mesh:
+            jax.block_until_ready(fn(xg))          # compile + warm
+            t0 = _time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn(xg))
+            times.append((_time.perf_counter() - t0) / iters)
+        sizes.append(4 * n * w)                    # bytes each device sends
+    beta, alpha = np.polyfit(np.asarray(sizes, np.float64),
+                             np.asarray(times, np.float64), 1)
+    est = LinkEstimate(alpha=float(max(alpha, 0.0)),
+                       beta=float(max(beta, 1e-15)),
+                       nbytes=tuple(sizes), times=tuple(times))
+    _LINK_CACHE[key] = est
+    return est
+
+
+def measured_moe_links(mesh, *, data_axis: str = "data",
+                       pod_axis: str | None = None) -> dict:
+    """Measured near (intra-pod) / far (inter-pod) links for one EP mesh.
+
+    Axes of size 1 (or absent) are skipped — their entry is None and
+    :func:`moe_overlap_terms` falls back to the topology constants.
+    """
+    links = {"near": None, "far": None}
+    if mesh.shape.get(data_axis, 1) > 1:
+        links["near"] = measure_link(mesh, data_axis)
+    if pod_axis is not None and mesh.shape.get(pod_axis, 1) > 1:
+        links["far"] = measure_link(mesh, pod_axis)
+    return links

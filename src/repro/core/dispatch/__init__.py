@@ -1,0 +1,44 @@
+"""Composable MoE dispatch engine: routing → transport → compute → combine.
+
+One pipeline, four (extensible) execution paths, resolved by name through a
+registry — see engine.py for the path contract and ROADMAP.md for the
+subsystem overview.
+
+    from repro.core import dispatch
+    eng = dispatch.make_engine("a2a_pipelined", cfg=cfg, ep=ep,
+                               gate_cfg=gate_cfg, plan=plan, num_chunks=4)
+    y, metrics = eng(params, x)          # inside shard_map over the EP axes
+"""
+
+from repro.core.dispatch.base import (          # noqa: F401
+    EPSpec,
+    MoEConfig,
+    expert_ffn,
+    init_moe_params,
+    moe_param_specs,
+    shared_ffn,
+)
+from repro.core.dispatch.engine import (        # noqa: F401
+    METRIC_KEYS,
+    DispatchEngine,
+    DispatchPath,
+    available,
+    dispatch_moe,
+    get_path,
+    make_engine,
+    register,
+)
+from repro.core.dispatch.routing import (       # noqa: F401
+    Routing,
+    Selection,
+    pad_selection,
+    route,
+    score_matrix,
+    select,
+)
+from repro.core.dispatch.schedule import software_pipeline  # noqa: F401
+from repro.core.dispatch.transport import (     # noqa: F401
+    A2ATransport,
+    GatherTransport,
+    wire_a2a,
+)

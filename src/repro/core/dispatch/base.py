@@ -1,0 +1,163 @@
+"""Shared MoE building blocks for every dispatch path.
+
+This module owns the pieces that are *schedule-independent*: the layer /
+expert-parallel configuration dataclasses, parameter init + partition
+specs, and the grouped expert FFN (plus the DeepSeek-style shared-expert
+FFN).  The dispatch stages compose around these:
+
+    routing.py   — gate + per-level token selection (identical for all
+                   staged paths; what makes their outputs equivalent)
+    transport.py — the collective movement primitives (near/far a2a,
+                   gather/psum) with the wire-dtype cast
+    schedule.py  — the software-pipeline execution skeleton
+    engine.py    — the registry that composes the above into named paths
+
+Everything here runs INSIDE ``shard_map`` over the expert-parallel mesh
+axes; see engine.py for the path contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gating
+
+
+@dataclasses.dataclass(frozen=True)
+class EPSpec:
+    """How expert parallelism maps onto the mesh."""
+    num_pods: int                 # pods over which experts span (1 = no pod span)
+    ep_per_pod: int               # "data"-axis size
+    pod_axis: Optional[str]       # mesh axis name, None when experts don't span pods
+    data_axis: str
+    model_axis: Optional[str]     # tensor-parallel axis for d_ff
+
+    @property
+    def ep_world(self) -> int:
+        return self.num_pods * self.ep_per_pod
+
+    def ep_axes(self):
+        return ((self.pod_axis,) if self.pod_axis else ()) + (self.data_axis,)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                     # per-expert intermediate size
+    num_experts: int              # routed experts N
+    top_k: int
+    capacity_factor: float = 1.25
+    num_shared_experts: int = 0   # DeepSeek-style always-on experts
+    activation: str = "swiglu"    # "swiglu" | "gelu"
+    dtype: jnp.dtype = jnp.bfloat16
+    use_kernel: bool = False      # Pallas grouped GEMM for expert FFN
+    a2a_dtype: str = ""           # e.g. "float8_e4m3fn": quantize dispatch/
+                                  # combine payloads on the wire (§Perf.2) —
+                                  # halves collective bytes vs bf16
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_moe_params(key, cfg: MoEConfig, ep: EPSpec, gate_cfg: gating.GateConfig):
+    """Global (unsharded-view) parameter pytree for one MoE layer.
+
+    Expert tensors carry the full N on axis 0; the caller shards axis 0 over
+    the EP axes and the d_ff axis over ``model``.
+    """
+    keys = jax.random.split(key, 8)
+    d, f, n = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s1 = (1.0 / np.sqrt(d))
+    s2 = (1.0 / np.sqrt(f))
+    p = {
+        "gate": gating.init_gate_params(keys[0], d, gate_cfg),
+        "w_in": jax.random.normal(keys[1], (n, d, f), cfg.dtype) * s1,
+        "w_out": jax.random.normal(keys[2], (n, f, d), cfg.dtype) * s2,
+    }
+    if cfg.activation == "swiglu":
+        p["w_gate"] = jax.random.normal(keys[3], (n, d, f), cfg.dtype) * s1
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff * cfg.num_shared_experts
+        p["shared_in"] = jax.random.normal(keys[4], (d, fs), cfg.dtype) * s1
+        p["shared_out"] = jax.random.normal(keys[5], (fs, d), cfg.dtype) * s2
+        if cfg.activation == "swiglu":
+            p["shared_gate"] = jax.random.normal(keys[6], (d, fs), cfg.dtype) * s1
+    return p
+
+
+def moe_param_specs(cfg: MoEConfig, ep: EPSpec):
+    """PartitionSpec pytree matching init_moe_params."""
+    from jax.sharding import PartitionSpec as P
+    expert_axes = (ep.ep_axes() if len(ep.ep_axes()) > 1 else ep.data_axis)
+    if isinstance(expert_axes, tuple) and len(expert_axes) == 1:
+        expert_axes = expert_axes[0]
+    m = ep.model_axis
+    specs = {
+        "gate": {"w": P(None, None)},
+        "w_in": P(expert_axes, None, m),
+        "w_out": P(expert_axes, m, None),
+    }
+    if cfg.activation == "swiglu":
+        specs["w_gate"] = P(expert_axes, None, m)
+    if cfg.num_shared_experts:
+        specs["shared_in"] = P(None, m)
+        specs["shared_out"] = P(m, None)
+        if cfg.activation == "swiglu":
+            specs["shared_gate"] = P(None, m)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# expert FFN (grouped)
+# ---------------------------------------------------------------------------
+
+
+def _act(cfg, xin, params):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xin, params["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, params["w_in"]))
+    return h
+
+
+def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
+               chunk_granular: bool = False):
+    """Grouped expert FFN on [E_local, C, d] -> [E_local, C, d].
+
+    d_ff is sharded over the model axis; the output psum happens here so the
+    caller sees full activations.  ``chunk_granular`` routes through the
+    row-padding kernel entry sized for pipelined-dispatch chunk slices.
+    """
+    if cfg.use_kernel:
+        from repro.kernels.moe_gemm import ops as moe_gemm_ops
+        ffn = (moe_gemm_ops.grouped_ffn_chunk if chunk_granular
+               else moe_gemm_ops.grouped_ffn)
+        y = ffn(
+            xin, params["w_in"],
+            params.get("w_gate"), params["w_out"],
+            activation=cfg.activation)
+    else:
+        h = _act(cfg, xin, params)
+        y = jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+    if ep.model_axis is not None:
+        y = jax.lax.psum(y, ep.model_axis)
+    return y
+
+
+def shared_ffn(params, x, cfg: MoEConfig, ep: EPSpec):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_in"])
+    else:
+        h = jax.nn.gelu(x @ params["shared_in"])
+    y = h @ params["shared_out"]
+    if ep.model_axis is not None:
+        y = jax.lax.psum(y, ep.model_axis)
+    return y

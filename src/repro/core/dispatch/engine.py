@@ -1,0 +1,332 @@
+"""DispatchEngine: the registry that composes routing→transport→compute→
+combine into named MoE dispatch paths.
+
+Paths are registered by name (the string carried by ``RunConfig.dispatch``
+and per-layer ``MoEArch.dispatch_override`` entries) and resolved through
+:func:`make_engine`.  Every path returns ``(y, metrics)`` with the uniform
+schema :data:`METRIC_KEYS` — missing keys are filled with neutral defaults
+by the engine so callers (shard_map out_specs, trainers, benchmarks) never
+branch on the path.
+
+Built-in paths:
+
+    a2a            staged hierarchical all-to-all (train / prefill); the
+                   software pipeline at num_chunks=1, i.e. fully serialized
+    a2a_pipelined  same routing/capacities, chunked 3-stage comm–compute
+                   overlap schedule (num_chunks > 1)
+    gather         weights-stationary decode regime: all-gather + psum
+    einsum         the GShard/DeepSpeed one-hot [T, N, C] formulation —
+                   shard-local (no collectives), kept as the §2 baseline
+                   and the equivalence oracle for the selection-based paths
+
+Adding a path: implement ``fn(params, x, eng) -> (y, metrics)`` where
+``eng`` is the resolved :class:`DispatchEngine` (cfg/ep/plan/gate_cfg and
+schedule knobs), then decorate with ``@register("name")``.  Compose the
+stage modules rather than re-implementing them — routing is what makes
+cross-path outputs comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gating
+from repro.core.capacity import CapacityPlan
+from repro.core.dispatch import routing, schedule, transport
+from repro.core.dispatch.base import EPSpec, MoEConfig, expert_ffn, shared_ffn
+
+#: Uniform metrics schema every path resolves to.
+METRIC_KEYS = ("aux_loss", "frac_near", "frac_far", "dropped")
+
+_METRIC_DEFAULTS = {"frac_near": 1.0, "frac_far": 0.0, "dropped": 0.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPath:
+    """A registered dispatch implementation."""
+    name: str
+    fn: Callable
+    needs_plan: bool = False
+
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, *, needs_plan: bool = False):
+    """Decorator registering ``fn(params, x, eng) -> (y, metrics)``."""
+    def deco(fn):
+        _REGISTRY[name] = DispatchPath(name=name, fn=fn, needs_plan=needs_plan)
+        return fn
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_path(name: str) -> DispatchPath:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown dispatch {name!r}; "
+                         f"registered paths: {available()}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchEngine:
+    """A dispatch path resolved against one MoE layer's static config.
+
+    Callable on ``(params, x)`` INSIDE shard_map over the EP axes, with
+    ``x: [T_local, d]``; returns ``(y, metrics)`` where metrics carries
+    exactly :data:`METRIC_KEYS`.
+    """
+
+    path: DispatchPath
+    cfg: MoEConfig
+    ep: EPSpec
+    gate_cfg: gating.GateConfig
+    plan: Optional[CapacityPlan] = None
+    num_chunks: int = 1               # a2a_pipelined schedule depth
+    capacity: Optional[int] = None    # einsum buffer capacity (None = cf rule)
+    tokens_replicated: bool = False   # gather: tokens already on every rank
+
+    @property
+    def name(self) -> str:
+        return self.path.name
+
+    def __call__(self, params, x):
+        y, metrics = self.path.fn(params, x, self)
+        out = {"aux_loss": metrics["aux_loss"]}
+        for k in ("frac_near", "frac_far", "dropped"):
+            v = metrics.get(k, _METRIC_DEFAULTS[k])
+            out[k] = jnp.asarray(v, jnp.float32)
+        return y, out
+
+
+def make_engine(name: str, *, cfg: MoEConfig, ep: EPSpec,
+                gate_cfg: gating.GateConfig,
+                plan: Optional[CapacityPlan] = None, num_chunks: int = 1,
+                capacity: Optional[int] = None,
+                tokens_replicated: bool = False) -> DispatchEngine:
+    """Resolve ``name`` against the registry and bind the static config."""
+    path = get_path(name)
+    if path.needs_plan and plan is None:
+        raise ValueError(f"dispatch {name!r} requires a CapacityPlan")
+    return DispatchEngine(path=path, cfg=cfg, ep=ep, gate_cfg=gate_cfg,
+                          plan=plan, num_chunks=max(1, int(num_chunks)),
+                          capacity=capacity,
+                          tokens_replicated=tokens_replicated)
+
+
+def dispatch_moe(name: str, params, x, *, cfg: MoEConfig, ep: EPSpec,
+                 gate_cfg: gating.GateConfig, **kwargs):
+    """One-shot convenience: resolve + apply in a single call."""
+    return make_engine(name, cfg=cfg, ep=ep, gate_cfg=gate_cfg, **kwargs)(
+        params, x)
+
+
+# ---------------------------------------------------------------------------
+# staged a2a paths (sync == num_chunks 1, pipelined == num_chunks k)
+# ---------------------------------------------------------------------------
+
+
+def _staged_metrics(gate_out, aux, levels, v_near, T: int, cfg: MoEConfig,
+                    gate_cfg: gating.GateConfig):
+    """Per-level dispatched token counts (for Fig 6b / Fig 7)."""
+    frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
+    lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
+    return {
+        "aux_loss": aux,
+        "frac_near": lvl1,
+        "frac_far": 1.0 - lvl1,
+        "dropped": 1.0 - jnp.minimum(
+            v_near.sum() / (T * gate_cfg.top_k), 1.0),
+    }
+
+
+def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
+    """The one staged implementation behind both ``a2a`` and
+    ``a2a_pipelined``: shared routing, chunk-sliced transport, and the
+    software-pipeline schedule (serialized when ``num_chunks == 1``).
+
+    Routing, capacities and combine weights are identical across chunk
+    counts, so outputs are allclose at matched capacities (the per-token
+    accumulation order over chunks may differ in the last ulp).
+    """
+    cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
+    T, d = x.shape
+    P1 = ep.ep_per_pod
+    tr = transport.A2ATransport(ep=ep, wire_dtype=cfg.a2a_dtype)
+
+    near, far, gate_out, aux, levels = routing.route(params, x, cfg, ep,
+                                                     plan, gate_cfg)
+    v_near_unpadded = near.valid
+    num_chunks = max(1, int(num_chunks))
+    chunked = num_chunks > 1
+    near = routing.pad_selection(near, axis=2, multiple=num_chunks)
+    cn = near.buf.shape[2] // num_chunks          # per-chunk near capacity
+    cf = 0
+    if far is not None:
+        far = routing.pad_selection(far, axis=3, multiple=num_chunks)
+        cf = far.buf.shape[3] // num_chunks       # per-chunk far capacity
+
+    def dispatch(j):
+        xin = tr.dispatch_near(
+            jax.lax.slice_in_dim(near.buf, j * cn, (j + 1) * cn, axis=2))
+        if far is not None:
+            xin_far = tr.dispatch_far(
+                jax.lax.slice_in_dim(far.buf, j * cf, (j + 1) * cf, axis=3))
+            xin = jnp.concatenate([xin, xin_far], axis=1)
+        return xin                                # [E_l, P1*cn + Q*P1*cf, d]
+
+    def compute(j, xin):
+        return expert_ffn(params, xin, cfg, ep, chunk_granular=chunked)
+
+    def combine(out, j, y_exp):
+        if out is None:
+            out = jnp.zeros((T, d), y_exp.dtype)
+        back = tr.combine_near(y_exp[:, : P1 * cn])
+        sl = slice(j * cn, (j + 1) * cn)
+        wgt = (near.w[:, :, sl] * near.valid[:, :, sl]).astype(y_exp.dtype)
+        out = out.at[near.idx[:, :, sl]].add(back * wgt[..., None])
+        if far is not None:
+            back_far = tr.combine_far(y_exp[:, P1 * cn:])
+            slf = slice(j * cf, (j + 1) * cf)
+            wf = (far.w[..., slf] * far.valid[..., slf]).astype(y_exp.dtype)
+            out = out.at[far.idx[..., slf]].add(back_far * wf[..., None])
+        return out
+
+    out = schedule.software_pipeline(num_chunks, dispatch, compute, combine,
+                                     None)
+
+    if cfg.num_shared_experts:
+        # independent of every chunk: another overlap opportunity for the
+        # scheduler, issued after the pipeline drains.
+        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
+
+    metrics = _staged_metrics(gate_out, aux, levels, v_near_unpadded, T, cfg,
+                              gate_cfg)
+    return out.astype(x.dtype), metrics
+
+
+@register("a2a", needs_plan=True)
+def _a2a_path(params, x, eng: DispatchEngine):
+    """Sync staged all-to-all: the pipeline schedule at num_chunks=1."""
+    return _staged_a2a(params, x, eng, 1)
+
+
+@register("a2a_pipelined", needs_plan=True)
+def _a2a_pipelined_path(params, x, eng: DispatchEngine):
+    """Chunked comm–compute-overlap schedule over the same routing."""
+    return _staged_a2a(params, x, eng, eng.num_chunks)
+
+
+# ---------------------------------------------------------------------------
+# gather path (decode)
+# ---------------------------------------------------------------------------
+
+
+@register("gather")
+def _gather_path(params, x, eng: DispatchEngine):
+    """Decode-time MoE: weights stationary, tokens gathered.
+
+    x: [T_local, d].  When ``eng.tokens_replicated`` the same tokens exist
+    on every EP rank already (long_500k batch=1) and no gather/slice is
+    done.  Bandwidth-optimal for single-token steps (no all-to-all).
+    """
+    cfg, ep, gate_cfg = eng.cfg, eng.ep, eng.gate_cfg
+    P1 = ep.ep_per_pod
+    E_l = max(1, -(-cfg.num_experts // ep.ep_world))
+    tr = transport.GatherTransport(ep=ep,
+                                   tokens_replicated=eng.tokens_replicated)
+    my_data = jax.lax.axis_index(ep.data_axis)
+    my_pod = (jax.lax.axis_index(ep.pod_axis) if tr.multipod
+              else jnp.int32(0))
+    my_rank = my_pod * P1 + my_data
+
+    xg = tr.gather(x)
+    levels = gating.expert_levels(cfg.num_experts, E_l, P1, ep.num_pods,
+                                  my_pod, my_data)
+    # levels=None for the gate itself: the hir bias is rank-relative and
+    # every rank gates the *gathered* tokens here, so biasing would make
+    # the implied routing rank-dependent.  The aux loss below does use the
+    # levels — gather is a first-class training path, so it reports the
+    # real balance/topology loss (decode callers ignore metrics anyway).
+    gate_out = gating.gate_forward(params["gate"], xg, gate_cfg, None)
+    aux = gating.aux_loss(gate_out, gate_cfg, levels)
+    w_mine = routing.gather_weights(gate_out, my_rank, E_l)      # [Tg, E_l]
+
+    xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)                # [E_l, Tg, d]
+    y = expert_ffn(params, xin, cfg, ep)                         # [E_l, Tg, d]
+    y = jnp.einsum("etd,te->td", y, w_mine.astype(y.dtype))      # [Tg, d]
+
+    y = tr.reduce(y)
+    y = tr.slice_local(y, my_rank, x.shape[0])
+
+    if cfg.num_shared_experts:
+        y = y + shared_ffn(params, x, cfg, ep).astype(y.dtype)
+
+    frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
+    lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
+    metrics = {"aux_loss": aux,
+               "frac_near": lvl1, "frac_far": 1.0 - lvl1,
+               "dropped": 0.0}   # no capacity limit: nothing ever drops
+    return y.astype(x.dtype), metrics
+
+
+# ---------------------------------------------------------------------------
+# GShard/DeepSpeed-style einsum dispatch (baseline from the paper's §2)
+# ---------------------------------------------------------------------------
+
+
+@register("einsum")
+def _einsum_path(params, x, eng: DispatchEngine):
+    """The classic einsum formulation: one-hot dispatch/combine tensors of
+    shape [T, N, C] route tokens through a zero-padded [N, C, d] buffer.
+
+    This is the DeepSpeed-MoE / GShard baseline the paper describes as
+    introducing "redundant zero computation and extra memory consumption"
+    (§2) — kept for comparison and as the equivalence oracle for the
+    selection-based paths.  Runs shard-local (no collectives): suitable for
+    pjit auto-sharding or single-rank tests only.
+    """
+    cfg, ep, gate_cfg = eng.cfg, eng.ep, eng.gate_cfg
+    T, d = x.shape
+    N, K = cfg.num_experts, cfg.top_k
+    capacity = eng.capacity
+    if capacity is None:
+        capacity = max(1, int(T * K * cfg.capacity_factor / N))
+
+    gate_out = gating.gate_forward(params["gate"], x, gate_cfg, None)
+    aux = gating.aux_loss(gate_out, gate_cfg, None)
+    topk_idx, topk_w = gate_out["topk_idx"], gate_out["topk_weight"]
+
+    # position of each (token, slot) within its expert's capacity buffer
+    dispatch = jnp.zeros((T, N, capacity), jnp.float32)
+    combine = jnp.zeros((T, N, capacity), jnp.float32)
+    counts = jnp.zeros((N,), jnp.int32)
+    for s in range(K):
+        e = topk_idx[:, s]                       # [T]
+        onehot = jax.nn.one_hot(e, N, dtype=jnp.int32)        # [T, N]
+        pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot   # [T, N]
+        pos = jnp.sum(pos_in_e, axis=1) + counts[e]            # [T]
+        keep = pos < capacity
+        slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
+        mask = (onehot.astype(jnp.float32) * keep[:, None].astype(jnp.float32))
+        d_s = mask[:, :, None] * slot[:, None, :]              # [T, N, C]
+        dispatch = dispatch + d_s
+        combine = combine + d_s * topk_w[:, s][:, None, None]
+        counts = counts + jnp.sum(onehot * keep[:, None], axis=0)
+
+    xin = jnp.einsum("tnc,td->ncd", dispatch, x.astype(jnp.float32))
+    y_exp = expert_ffn(params, xin.astype(x.dtype), cfg, ep)   # [N, C, d]
+    y = jnp.einsum("tnc,ncd->td", combine, y_exp.astype(jnp.float32))
+    if cfg.num_shared_experts:
+        y = y + shared_ffn(params, x, cfg, ep).astype(y.dtype)
+    metrics = {"aux_loss": aux,
+               "dropped": 1.0 - dispatch.sum() / (T * K)}
+    return y.astype(x.dtype), metrics

@@ -1,0 +1,132 @@
+"""Routing stage: gate forward + per-topology-level token selection.
+
+Every staged dispatch path (``a2a``, ``a2a_pipelined``) runs this *identical*
+routing — same gate, same per-level top-``cap`` selection, same combine
+weights — which is exactly what makes their outputs equivalent at matched
+capacities.  The execution schedule (transport.py / schedule.py) is the only
+thing that differs between them.
+
+Selections are ``Selection(w, idx, valid, buf)`` named tuples:
+
+    w      [..., cap]      combine weight per selected slot (-1 = empty)
+    idx    [..., cap]      source-token index of each slot
+    valid  [..., cap]      1.0 where the slot holds a real token
+    buf    [..., cap, d]   the gathered (and masked) token payload
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gating
+from repro.core.capacity import CapacityPlan
+from repro.core.dispatch.base import EPSpec, MoEConfig
+
+
+class Selection(NamedTuple):
+    """Per-(destination, capacity-slot) token selection."""
+    w: jnp.ndarray
+    idx: jnp.ndarray
+    valid: jnp.ndarray
+    buf: jnp.ndarray
+
+
+class Routing(NamedTuple):
+    """Output of :func:`route` — shared by all staged paths."""
+    near: Selection                # capacity axis 2: [P1, E_l, C, ...]
+    far: Optional[Selection]       # capacity axis 3: [Q, P1, E_l, C, ...]
+    gate_out: dict
+    aux: jnp.ndarray
+    levels: jnp.ndarray
+
+
+def score_matrix(gate_out, num_experts: int):
+    """[N, T] combine-weight matrix; -1 marks 'token did not pick expert'."""
+    topk_idx, topk_w = gate_out["topk_idx"], gate_out["topk_weight"]
+    T = topk_idx.shape[0]
+    s = jnp.full((T, num_experts), -1.0, jnp.float32)
+    s = s.at[jnp.arange(T)[:, None], topk_idx].set(topk_w.astype(jnp.float32))
+    return s.T
+
+
+def select(score_rows, x, cap: int) -> Selection:
+    """Top-``cap`` tokens for each leading row of score_rows [..., T]."""
+    cap = min(cap, score_rows.shape[-1])
+    w, idx = jax.lax.top_k(score_rows, cap)
+    valid = (w > 0).astype(x.dtype)
+    buf = jnp.take(x, idx, axis=0) * valid[..., None]
+    return Selection(w, idx, valid, buf)
+
+
+def route(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
+          gate_cfg: gating.GateConfig) -> Routing:
+    """Gating + per-level token selection for the staged (a2a) paths.
+
+    ``near`` targets the experts of this rank's own pod (delivered over the
+    data axis at capacity ``plan.cap_near``); ``far`` targets other pods
+    (two-stage delivery at ``plan.cap_far``; None on single-pod meshes).
+    """
+    P1 = ep.ep_per_pod
+    E_l = plan.experts_per_rank
+    n_pods = ep.num_pods
+    multipod = ep.pod_axis is not None and n_pods > 1
+
+    my_data = jax.lax.axis_index(ep.data_axis)
+    my_pod = jax.lax.axis_index(ep.pod_axis) if multipod else jnp.int32(0)
+
+    levels = gating.expert_levels(cfg.num_experts, E_l, P1,
+                                  n_pods, my_pod, my_data)
+    gate_out = gating.gate_forward(params["gate"], x, gate_cfg, levels)
+    aux = gating.aux_loss(gate_out, gate_cfg, levels)
+
+    score = score_matrix(gate_out, cfg.num_experts)  # [N, T]
+
+    # near: experts of my own pod, delivered over the data axis
+    near_rank = my_pod * P1 + jnp.arange(P1)                       # [P1]
+    near_eids = near_rank[:, None] * E_l + jnp.arange(E_l)         # [P1, E_l]
+    s_near = jnp.take(score, near_eids, axis=0)                    # [P1, E_l, T]
+    near = select(s_near, x, plan.cap_near)
+
+    far = None
+    if multipod and plan.cap_far > 0:
+        all_rank = (jnp.arange(n_pods)[:, None] * P1
+                    + jnp.arange(P1)[None, :])                      # [Q, P1]
+        far_eids = all_rank[..., None] * E_l + jnp.arange(E_l)      # [Q, P1, E_l]
+        s_far = jnp.take(score, far_eids, axis=0)                   # [Q, P1, E_l, T]
+        own = (jnp.arange(n_pods) == my_pod)[:, None, None, None]
+        s_far = jnp.where(own, -1.0, s_far)  # own pod handled by near stage
+        far = select(s_far, x, plan.cap_far)
+    return Routing(near, far, gate_out, aux, levels)
+
+
+def pad_selection(sel: Selection, axis: int, multiple: int) -> Selection:
+    """Zero-pad a selection's capacity axis up to a multiple of ``multiple``.
+
+    Padded slots carry ``valid == 0`` and ``idx == 0``: their FFN output is
+    exactly zero (no biases anywhere in the expert FFN) and their combine
+    weight is zero, so they contribute nothing — this keeps every chunk
+    equal-split per level even when the plan capacity was clamped to the
+    local token count.
+    """
+    pad = (-sel.w.shape[axis]) % multiple
+    if pad == 0:
+        return sel
+
+    def _pad(a):
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+    return Selection(*(_pad(a) for a in sel))
+
+
+def gather_weights(gate_out, my_rank, experts_per_rank: int):
+    """[Tg, E_l] combine weight of each of this rank's experts per token
+    (0 where the token did not select the expert) — the routing stage of the
+    weights-stationary ``gather`` path."""
+    my_eids = my_rank * experts_per_rank + jnp.arange(experts_per_rank)
+    sel = (gate_out["topk_idx"][:, :, None] == my_eids[None, None, :])
+    return jnp.sum(jnp.where(sel, gate_out["topk_weight"][:, :, None], 0.0),
+                   axis=1)

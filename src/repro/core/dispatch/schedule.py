@@ -1,0 +1,40 @@
+"""Schedule stage: execution skeletons over routing + transport + compute.
+
+The only schedule today is the 3-stage software pipeline.  The sync a2a
+path is *literally* :func:`software_pipeline` with ``num_chunks == 1`` —
+one dispatch, one compute, one combine, fully serialized — so the engine
+has a single staged implementation and the schedules differ only in chunk
+count.  Later async features (shadowed experts, quantized-a2a overlap,
+decode batching) reuse the skeleton by swapping the stage callables.
+"""
+
+from __future__ import annotations
+
+
+def software_pipeline(num_chunks: int, dispatch, compute, combine, carry):
+    """Unrolled 3-stage software pipeline over ``num_chunks`` chunks.
+
+    At pipeline tick ``t`` this issues, in order: the dispatch of chunk
+    ``t`` (first, so its exchange is in flight as early as possible), the
+    compute of chunk ``t-1``, and the combine of chunk ``t-2``.  The three
+    live chunks are mutually independent, so a backend with async
+    collectives can run chunk ``t``'s exchange concurrently with chunk
+    ``t-1``'s GEMM and chunk ``t-2``'s reverse exchange; the double-buffer
+    working set (one in-flight dispatch + one in-flight compute) has
+    non-overlapping lifetimes that XLA's buffer assignment reuses in place.
+
+    ``dispatch(j)`` produces chunk ``j``'s in-flight value, ``compute(j, v)``
+    transforms it, and ``combine(carry, j, v)`` folds it into ``carry``.
+    With ``num_chunks == 1`` the loop degenerates to the sync schedule:
+    dispatch(0); compute(0); combine(0).
+    """
+    in_dispatch = None            # (j, dispatched chunk j)
+    in_compute = None             # (j, computed chunk j)
+    for t in range(num_chunks + 2):
+        nxt = (t, dispatch(t)) if t < num_chunks else None
+        cmp = (in_dispatch[0], compute(*in_dispatch)) \
+            if in_dispatch is not None else None
+        if in_compute is not None:
+            carry = combine(carry, *in_compute)
+        in_dispatch, in_compute = nxt, cmp
+    return carry

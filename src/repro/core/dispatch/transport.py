@@ -1,0 +1,126 @@
+"""Transport stage: the collective movement primitives of each dispatch path.
+
+A transport object owns *how bytes move between EP ranks* — nothing about
+routing or scheduling.  Two families exist:
+
+* :class:`A2ATransport` — equal-split staged ``lax.all_to_all``: one
+  intra-pod stage over the data axis (``cap_near`` slots) and, on multipod
+  meshes, a two-hop inter-pod delivery (pod axis then data axis,
+  ``cap_far`` slots).  The wire-dtype cast (e.g. fp8 payload quantization)
+  lives here, immediately around each collective, so only wire bytes are
+  low-precision while compute stays in the model dtype.
+* :class:`GatherTransport` — the weights-stationary decode regime: tokens
+  are (all-)gathered to every EP rank and partial expert outputs are
+  psum-combined; no all-to-all at all.
+
+New transports (e.g. a ragged / sparsity-aware exchange) plug in by
+implementing the same dispatch/combine surface and get picked up by a path
+definition in engine.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch.base import EPSpec
+
+
+def wire_a2a(x, axis_name, *, split_axis, concat_axis, wire_dtype: str = ""):
+    """all_to_all with optional on-the-wire quantization.
+
+    The cast happens immediately around the collective so only the wire
+    payload is low-precision; compute stays in the model dtype.  f8e4m3's
+    +-448 range comfortably covers post-norm activations.
+    """
+    if wire_dtype:
+        orig = x.dtype
+        x = x.astype(jnp.dtype(wire_dtype))
+        x = jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                               concat_axis=concat_axis, tiled=True)
+        return x.astype(orig)
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class A2ATransport:
+    """Equal-split staged all-to-all over the EP mesh axes."""
+
+    ep: EPSpec
+    wire_dtype: str = ""
+
+    def dispatch_near(self, buf):
+        """[P1, E_l, C, d] local buffer -> [E_l, P1*C, d] expert rows."""
+        P1, E_l, C, d = buf.shape
+        recv = wire_a2a(buf, self.ep.data_axis, split_axis=0, concat_axis=0,
+                        wire_dtype=self.wire_dtype)
+        return recv.transpose(1, 0, 2, 3).reshape(E_l, P1 * C, d)
+
+    def dispatch_far(self, buf):
+        """[Q, P1, E_l, C, d] local buffer -> [E_l, Q*P1*C, d] expert rows."""
+        Q, P1, E_l, C, d = buf.shape
+        # pod exchange: slice [q] -> pod q (carries tokens for (q, *) ranks)
+        t = wire_a2a(buf, self.ep.pod_axis, split_axis=0, concat_axis=0,
+                     wire_dtype=self.wire_dtype)
+        # deliver within pod: axis 1 is the destination data index
+        t = wire_a2a(t, self.ep.data_axis, split_axis=1, concat_axis=1,
+                     wire_dtype=self.wire_dtype)
+        # t[q, s]: tokens from rank (q, s) for my experts
+        return t.transpose(2, 0, 1, 3, 4).reshape(E_l, Q * P1 * C, d)
+
+    def combine_near(self, y):
+        """[E_l, P1*C, d] expert outputs -> [P1, E_l, C, d] at the source."""
+        P1 = self.ep.ep_per_pod
+        E_l, R, d = y.shape
+        y = y.reshape(E_l, P1, R // P1, d).transpose(1, 0, 2, 3)
+        return wire_a2a(y, self.ep.data_axis, split_axis=0, concat_axis=0,
+                        wire_dtype=self.wire_dtype)
+
+    def combine_far(self, y):
+        """[E_l, Q*P1*C, d] expert outputs -> [Q, P1, E_l, C, d] at source."""
+        n_pods, P1 = self.ep.num_pods, self.ep.ep_per_pod
+        E_l, R, d = y.shape
+        y = y.reshape(E_l, n_pods, P1, R // (n_pods * P1), d)
+        y = y.transpose(1, 2, 0, 3, 4)                   # [Q, P1, E_l, C, d]
+        y = wire_a2a(y, self.ep.data_axis, split_axis=1, concat_axis=1,
+                     wire_dtype=self.wire_dtype)
+        return wire_a2a(y, self.ep.pod_axis, split_axis=0, concat_axis=0,
+                        wire_dtype=self.wire_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherTransport:
+    """Weights-stationary transport: gather tokens, psum partial outputs."""
+
+    ep: EPSpec
+    tokens_replicated: bool = False   # tokens already on every EP rank
+
+    @property
+    def multipod(self) -> bool:
+        return self.ep.pod_axis is not None and self.ep.num_pods > 1
+
+    def gather(self, x):
+        """[T_local, d] -> [T_global, d] on every EP rank."""
+        if self.tokens_replicated:
+            return x
+        xg = jax.lax.all_gather(x, self.ep.data_axis, axis=0, tiled=True)
+        if self.multipod:
+            xg = jax.lax.all_gather(xg, self.ep.pod_axis, axis=0, tiled=True)
+        return xg
+
+    def reduce(self, y):
+        """Sum each rank's partial expert outputs across the EP axes."""
+        y = jax.lax.psum(y, self.ep.data_axis)
+        if self.multipod:
+            y = jax.lax.psum(y, self.ep.pod_axis)
+        return y
+
+    def slice_local(self, y, my_rank, T: int):
+        """[T_global, d] -> this rank's [T_local, d] slice (no-op when the
+        tokens were replicated)."""
+        if self.tokens_replicated:
+            return y
+        return jax.lax.dynamic_slice_in_dim(y, my_rank * T, T, axis=0)

@@ -117,13 +117,23 @@ def ta_penalties(ratios: tuple, norm: str = "sum",
     provided.
     """
     inv = np.array([1.0 / max(r, 1e-9) for r in ratios], dtype=np.float64)
-    if level_sizes is not None:
-        w = np.asarray(level_sizes, dtype=np.float64)
-        mean = float((inv * w).sum() / max(w.sum(), 1.0))
-    else:
-        mean = float(inv.mean())
-    p = inv / max(mean, 1e-12)
+
+    def _pop_mean(v):
+        if level_sizes is not None:
+            w = np.asarray(level_sizes, dtype=np.float64)
+            return float((v * w).sum() / max(w.sum(), 1.0))
+        return float(v.mean())
+
+    p = inv / max(_pop_mean(inv), 1e-12)
     if norm == "softmax":
+        # softmax reweighting of the mean-normalized inverse capacities,
+        # rescaled back to population mean 1 so the loss magnitude stays
+        # comparable with norm="sum".  (The old expression
+        # ``e / e.mean() / e.sum() * e.sum()`` cancelled to ``e / e.mean()``
+        # — an *unweighted* mean that broke the mean-1 invariant whenever
+        # level_sizes were given.)
         e = np.exp(p - p.max())
-        p = e / e.mean() / e.sum() * e.sum()  # keep mean-1 scaling
+        p = e / max(_pop_mean(e), 1e-12)
+    elif norm != "sum":
+        raise ValueError(f"unknown norm {norm!r}; expected 'sum' or 'softmax'")
     return tuple(float(v) for v in p)

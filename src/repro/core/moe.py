@@ -1,584 +1,66 @@
-"""Expert-parallel MoE layer with TA-MoE hierarchical dispatch.
+"""Deprecated compatibility shim over :mod:`repro.core.dispatch`.
 
-The layer body runs INSIDE ``shard_map`` over the expert-parallel mesh axes
-(``pod``, ``data``) plus the tensor-parallel ``model`` axis.  Dispatch modes:
+The MoE layer used to live here as four hand-rolled dispatch functions;
+it is now the composable ``core/dispatch`` package (routing / transport /
+schedule / engine).  This module keeps the old import surface working —
+``MoEConfig``, ``EPSpec``, parameter init/specs, the expert FFNs, the
+``software_pipeline`` skeleton, and ``moe_apply_*`` wrappers that resolve
+through the :class:`~repro.core.dispatch.DispatchEngine` registry.
 
-* ``a2a``   — training / prefill: token selection per (destination rank,
-  expert) with per-topology-level static capacities, then equal-split
-  ``lax.all_to_all`` stages — intra-pod over ``data`` (capacity ``cap_near``),
-  inter-pod over ``pod`` then ``data`` (capacity ``cap_far``).  With
-  ``cap_near == cap_far`` this is exactly the DeepSpeed-MoE/FastMoE even
-  dispatch baseline; with Eq. (7) capacities it is TA-MoE.
-* ``a2a_pipelined`` — same routing and capacities as ``a2a``, but the
-  per-level capacity buffers are split into ``num_chunks`` static chunks
-  along the capacity axis and the three stages (dispatch exchange, expert
-  GEMM, combine exchange) are software-pipelined: while chunk *k* is being
-  exchanged, chunk *k-1* runs its expert FFN and chunk *k-2* runs its
-  combine.  The chunks carry disjoint capacity slices, so the dependency
-  graph lets XLA's async collective scheduler overlap the slow inter-pod
-  exchange with expert compute (MoNTA / FasterMoE-style comm–compute
-  overlap) while the output stays allclose to ``a2a`` at equal capacities.
-* ``gather`` — decode: token counts are tiny, so experts stay put and tokens
-  are (all-)gathered; each rank computes its local experts on all tokens,
-  masked by the routing, and a ``psum`` over the EP axes combines.  This is
-  the weights-stationary regime that is bandwidth-optimal for single-token
-  steps (no all-to-all at all).
-
-Everything is static-shaped; see DESIGN.md §2 for why Eq. (7)'s
-level-constant solution makes that lossless.
+New code should import from ``repro.core.dispatch`` directly (or go through
+``models/transformer._moe_block``, which already does).  Note one schema
+change the wrappers inherit: every path now returns the uniform metrics
+dict ``("aux_loss", "frac_near", "frac_far", "dropped")``.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import gating
-from repro.core.capacity import CapacityPlan
-
-
-@dataclasses.dataclass(frozen=True)
-class EPSpec:
-    """How expert parallelism maps onto the mesh."""
-    num_pods: int                 # pods over which experts span (1 = no pod span)
-    ep_per_pod: int               # "data"-axis size
-    pod_axis: Optional[str]       # mesh axis name, None when experts don't span pods
-    data_axis: str
-    model_axis: Optional[str]     # tensor-parallel axis for d_ff
-
-    @property
-    def ep_world(self) -> int:
-        return self.num_pods * self.ep_per_pod
-
-    def ep_axes(self):
-        return ((self.pod_axis,) if self.pod_axis else ()) + (self.data_axis,)
+from repro.core import dispatch as _dispatch
+from repro.core.dispatch import (          # noqa: F401  (re-exports)
+    EPSpec,
+    MoEConfig,
+    expert_ffn,
+    init_moe_params,
+    moe_param_specs,
+    shared_ffn,
+    software_pipeline,
+)
+from repro.core.dispatch.base import _act  # noqa: F401  (legacy private name)
+from repro.core.dispatch.routing import (  # noqa: F401  (legacy private names)
+    pad_selection as _pad_selection,
+    route as _route,
+    score_matrix as _score_matrix,
+    select as _select,
+)
+from repro.core.dispatch.transport import wire_a2a as _a2a  # noqa: F401
 
 
-@dataclasses.dataclass(frozen=True)
-class MoEConfig:
-    d_model: int
-    d_ff: int                     # per-expert intermediate size
-    num_experts: int              # routed experts N
-    top_k: int
-    capacity_factor: float = 1.25
-    num_shared_experts: int = 0   # DeepSeek-style always-on experts
-    activation: str = "swiglu"    # "swiglu" | "gelu"
-    dtype: jnp.dtype = jnp.bfloat16
-    use_kernel: bool = False      # Pallas grouped GEMM for expert FFN
-    a2a_dtype: str = ""           # e.g. "float8_e4m3fn": quantize dispatch/
-                                  # combine payloads on the wire (§Perf.2) —
-                                  # halves collective bytes vs bf16
-
-
-# ---------------------------------------------------------------------------
-# parameters
-# ---------------------------------------------------------------------------
-
-
-def init_moe_params(key, cfg: MoEConfig, ep: EPSpec, gate_cfg: gating.GateConfig):
-    """Global (unsharded-view) parameter pytree for one MoE layer.
-
-    Expert tensors carry the full N on axis 0; the caller shards axis 0 over
-    the EP axes and the d_ff axis over ``model``.
-    """
-    keys = jax.random.split(key, 8)
-    d, f, n = cfg.d_model, cfg.d_ff, cfg.num_experts
-    s1 = (1.0 / np.sqrt(d))
-    s2 = (1.0 / np.sqrt(f))
-    p = {
-        "gate": gating.init_gate_params(keys[0], d, gate_cfg),
-        "w_in": jax.random.normal(keys[1], (n, d, f), cfg.dtype) * s1,
-        "w_out": jax.random.normal(keys[2], (n, f, d), cfg.dtype) * s2,
-    }
-    if cfg.activation == "swiglu":
-        p["w_gate"] = jax.random.normal(keys[3], (n, d, f), cfg.dtype) * s1
-    if cfg.num_shared_experts:
-        fs = cfg.d_ff * cfg.num_shared_experts
-        p["shared_in"] = jax.random.normal(keys[4], (d, fs), cfg.dtype) * s1
-        p["shared_out"] = jax.random.normal(keys[5], (fs, d), cfg.dtype) * s2
-        if cfg.activation == "swiglu":
-            p["shared_gate"] = jax.random.normal(keys[6], (d, fs), cfg.dtype) * s1
-    return p
-
-
-def moe_param_specs(cfg: MoEConfig, ep: EPSpec):
-    """PartitionSpec pytree matching init_moe_params."""
-    from jax.sharding import PartitionSpec as P
-    expert_axes = (ep.ep_axes() if len(ep.ep_axes()) > 1 else ep.data_axis)
-    if isinstance(expert_axes, tuple) and len(expert_axes) == 1:
-        expert_axes = expert_axes[0]
-    m = ep.model_axis
-    specs = {
-        "gate": {"w": P(None, None)},
-        "w_in": P(expert_axes, None, m),
-        "w_out": P(expert_axes, m, None),
-    }
-    if cfg.activation == "swiglu":
-        specs["w_gate"] = P(expert_axes, None, m)
-    if cfg.num_shared_experts:
-        specs["shared_in"] = P(None, m)
-        specs["shared_out"] = P(m, None)
-        if cfg.activation == "swiglu":
-            specs["shared_gate"] = P(None, m)
-    return specs
-
-
-# ---------------------------------------------------------------------------
-# expert FFN (grouped)
-# ---------------------------------------------------------------------------
-
-
-def _act(cfg, xin, params):
-    if cfg.activation == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["w_gate"]))
-        h = h * jnp.einsum("ecd,edf->ecf", xin, params["w_in"])
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, params["w_in"]))
-    return h
-
-
-def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
-               chunk_granular: bool = False):
-    """Grouped expert FFN on [E_local, C, d] -> [E_local, C, d].
-
-    d_ff is sharded over the model axis; the output psum happens here so the
-    caller sees full activations.  ``chunk_granular`` routes through the
-    row-padding kernel entry sized for pipelined-dispatch chunk slices.
-    """
-    if cfg.use_kernel:
-        from repro.kernels.moe_gemm import ops as moe_gemm_ops
-        ffn = (moe_gemm_ops.grouped_ffn_chunk if chunk_granular
-               else moe_gemm_ops.grouped_ffn)
-        y = ffn(
-            xin, params["w_in"],
-            params.get("w_gate"), params["w_out"],
-            activation=cfg.activation)
-    else:
-        h = _act(cfg, xin, params)
-        y = jnp.einsum("ecf,efd->ecd", h, params["w_out"])
-    if ep.model_axis is not None:
-        y = jax.lax.psum(y, ep.model_axis)
-    return y
-
-
-def shared_ffn(params, x, cfg: MoEConfig, ep: EPSpec):
-    if cfg.activation == "swiglu":
-        h = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_in"])
-    else:
-        h = jax.nn.gelu(x @ params["shared_in"])
-    y = h @ params["shared_out"]
-    if ep.model_axis is not None:
-        y = jax.lax.psum(y, ep.model_axis)
-    return y
-
-
-# ---------------------------------------------------------------------------
-# a2a dispatch path (train / prefill)
-# ---------------------------------------------------------------------------
-
-
-def _score_matrix(gate_out, num_experts: int):
-    """[N, T] combine-weight matrix; -1 marks 'token did not pick expert'."""
-    topk_idx, topk_w = gate_out["topk_idx"], gate_out["topk_weight"]
-    T = topk_idx.shape[0]
-    s = jnp.full((T, num_experts), -1.0, jnp.float32)
-    s = s.at[jnp.arange(T)[:, None], topk_idx].set(topk_w.astype(jnp.float32))
-    return s.T
-
-
-def _a2a(x, axis_name, *, split_axis, concat_axis, wire_dtype: str = ""):
-    """all_to_all with optional on-the-wire quantization.
-
-    The cast happens immediately around the collective so only the wire
-    payload is low-precision; compute stays in the model dtype.  f8e4m3's
-    +-448 range comfortably covers post-norm activations.
-    """
-    if wire_dtype:
-        orig = x.dtype
-        x = x.astype(jnp.dtype(wire_dtype))
-        x = jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
-                               concat_axis=concat_axis, tiled=True)
-        return x.astype(orig)
-    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
-                              concat_axis=concat_axis, tiled=True)
-
-
-def _select(score_rows, x, cap: int):
-    """Top-``cap`` tokens for each leading row of score_rows [..., T].
-
-    Returns (weights [..., cap], token_idx [..., cap], buf [..., cap, d]).
-    """
-    cap = min(cap, score_rows.shape[-1])
-    w, idx = jax.lax.top_k(score_rows, cap)
-    valid = (w > 0).astype(x.dtype)
-    buf = jnp.take(x, idx, axis=0) * valid[..., None]
-    return w, idx, valid, buf
-
-
-def _route(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
-           gate_cfg: gating.GateConfig):
-    """Gating + per-level token selection for the a2a paths.
-
-    Returns ``(near, far, gate_out, aux, levels)`` where ``near``/``far`` are
-    ``(w, idx, valid, buf)`` selection tuples with capacity axes 2 / 3
-    respectively (``far`` is None on single-pod meshes).  Both the sync and
-    the pipelined dispatch run this identical routing, which is what makes
-    their outputs equivalent at matched capacities.
-    """
-    P1 = ep.ep_per_pod
-    E_l = plan.experts_per_rank
-    n_pods = ep.num_pods
-    multipod = ep.pod_axis is not None and n_pods > 1
-
-    my_data = jax.lax.axis_index(ep.data_axis)
-    my_pod = jax.lax.axis_index(ep.pod_axis) if multipod else jnp.int32(0)
-
-    levels = gating.expert_levels(cfg.num_experts, E_l, P1,
-                                  n_pods, my_pod, my_data)
-    gate_out = gating.gate_forward(params["gate"], x, gate_cfg, levels)
-    aux = gating.aux_loss(gate_out, gate_cfg, levels)
-
-    score = _score_matrix(gate_out, cfg.num_experts)  # [N, T]
-
-    # near: experts of my own pod, delivered over the data axis
-    near_rank = my_pod * P1 + jnp.arange(P1)                       # [P1]
-    near_eids = near_rank[:, None] * E_l + jnp.arange(E_l)         # [P1, E_l]
-    s_near = jnp.take(score, near_eids, axis=0)                    # [P1, E_l, T]
-    near = _select(s_near, x, plan.cap_near)
-
-    far = None
-    if multipod and plan.cap_far > 0:
-        all_rank = (jnp.arange(n_pods)[:, None] * P1
-                    + jnp.arange(P1)[None, :])                      # [Q, P1]
-        far_eids = all_rank[..., None] * E_l + jnp.arange(E_l)      # [Q, P1, E_l]
-        s_far = jnp.take(score, far_eids, axis=0)                   # [Q, P1, E_l, T]
-        own = (jnp.arange(n_pods) == my_pod)[:, None, None, None]
-        s_far = jnp.where(own, -1.0, s_far)  # own pod handled by near stage
-        far = _select(s_far, x, plan.cap_far)
-    return near, far, gate_out, aux, levels
-
-
-def _dispatch_near(buf, cfg: MoEConfig, ep: EPSpec):
-    """[P1, E_l, C, d] local buffer -> [E_l, P1*C, d] expert rows."""
-    P1, E_l, C, d = buf.shape
-    recv = _a2a(buf, ep.data_axis, split_axis=0, concat_axis=0,
-                wire_dtype=cfg.a2a_dtype)
-    return recv.transpose(1, 0, 2, 3).reshape(E_l, P1 * C, d)
-
-
-def _dispatch_far(buf, cfg: MoEConfig, ep: EPSpec):
-    """[Q, P1, E_l, C, d] local buffer -> [E_l, Q*P1*C, d] expert rows."""
-    Q, P1, E_l, C, d = buf.shape
-    # pod exchange: slice [q] -> pod q (carries tokens for (q, *) ranks)
-    t = _a2a(buf, ep.pod_axis, split_axis=0, concat_axis=0,
-             wire_dtype=cfg.a2a_dtype)
-    # deliver within pod: axis 1 is the destination data index
-    t = _a2a(t, ep.data_axis, split_axis=1, concat_axis=1,
-             wire_dtype=cfg.a2a_dtype)
-    # t[q, s]: tokens from rank (q, s) for my experts
-    return t.transpose(2, 0, 1, 3, 4).reshape(E_l, Q * P1 * C, d)
-
-
-def _combine_near(y, P1: int, cfg: MoEConfig, ep: EPSpec):
-    """[E_l, P1*C, d] expert outputs -> [P1, E_l, C, d] back at the source."""
-    E_l, R, d = y.shape
-    y = y.reshape(E_l, P1, R // P1, d).transpose(1, 0, 2, 3)
-    return _a2a(y, ep.data_axis, split_axis=0, concat_axis=0,
-                wire_dtype=cfg.a2a_dtype)
-
-
-def _combine_far(y, n_pods: int, P1: int, cfg: MoEConfig, ep: EPSpec):
-    """[E_l, Q*P1*C, d] expert outputs -> [Q, P1, E_l, C, d] at the source."""
-    E_l, R, d = y.shape
-    y = y.reshape(E_l, n_pods, P1, R // (n_pods * P1), d)
-    y = y.transpose(1, 2, 0, 3, 4)                       # [Q, P1, E_l, C, d]
-    y = _a2a(y, ep.data_axis, split_axis=1, concat_axis=1,
-             wire_dtype=cfg.a2a_dtype)
-    return _a2a(y, ep.pod_axis, split_axis=0, concat_axis=0,
-                wire_dtype=cfg.a2a_dtype)
-
-
-def _a2a_metrics(gate_out, aux, levels, v_near, T: int, cfg: MoEConfig,
-                 gate_cfg: gating.GateConfig):
-    """Per-level dispatched token counts (for Fig 6b / Fig 7)."""
-    frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
-    lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
-    return {
-        "aux_loss": aux,
-        "frac_near": lvl1,
-        "frac_far": 1.0 - lvl1,
-        "dropped": 1.0 - jnp.minimum(
-            v_near.sum() / (T * gate_cfg.top_k), 1.0),
-    }
-
-
-def moe_apply_a2a(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
-                  gate_cfg: gating.GateConfig):
+def moe_apply_a2a(params, x, cfg, ep, plan, gate_cfg):
     """x: [T_local, d] inside shard_map. Returns (y, metrics)."""
-    T, d = x.shape
-    P1 = ep.ep_per_pod
-    n_pods = ep.num_pods
-
-    near, far, gate_out, aux, levels = _route(params, x, cfg, ep, plan,
-                                              gate_cfg)
-    w_near, i_near, v_near, buf_near = near
-    Cn = buf_near.shape[2]
-    xin = _dispatch_near(buf_near, cfg, ep)                # [E_l, P1*Cn, d]
-    if far is not None:
-        xin = jnp.concatenate([xin, _dispatch_far(far[3], cfg, ep)], axis=1)
-
-    # ---- expert compute ----
-    y_exp = expert_ffn(params, xin, cfg, ep)               # [E_l, R, d]
-
-    # ---- reverse + combine ----
-    back_near = _combine_near(y_exp[:, : P1 * Cn], P1, cfg, ep)
-    out = jnp.zeros((T, d), y_exp.dtype)
-    wgt = (w_near * v_near).astype(y_exp.dtype)
-    out = out.at[i_near].add(back_near * wgt[..., None])
-
-    if far is not None:
-        w_far, i_far, v_far, _ = far
-        back_far = _combine_far(y_exp[:, P1 * Cn:], n_pods, P1, cfg, ep)
-        wf = (w_far * v_far).astype(y_exp.dtype)
-        out = out.at[i_far].add(back_far * wf[..., None])
-
-    if cfg.num_shared_experts:
-        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
-
-    metrics = _a2a_metrics(gate_out, aux, levels, v_near, T, cfg, gate_cfg)
-    return out.astype(x.dtype), metrics
+    return _dispatch.dispatch_moe("a2a", params, x, cfg=cfg, ep=ep,
+                                  gate_cfg=gate_cfg, plan=plan)
 
 
-# ---------------------------------------------------------------------------
-# pipelined a2a dispatch (comm–compute overlap)
-# ---------------------------------------------------------------------------
-
-
-def software_pipeline(num_chunks: int, dispatch, compute, combine, carry):
-    """Unrolled 3-stage software pipeline over ``num_chunks`` chunks.
-
-    At pipeline tick ``t`` this issues, in order: the dispatch of chunk
-    ``t`` (first, so its exchange is in flight as early as possible), the
-    compute of chunk ``t-1``, and the combine of chunk ``t-2``.  The three
-    live chunks are mutually independent, so a backend with async
-    collectives can run chunk ``t``'s exchange concurrently with chunk
-    ``t-1``'s GEMM and chunk ``t-2``'s reverse exchange; the double-buffer
-    working set (one in-flight dispatch + one in-flight compute) has
-    non-overlapping lifetimes that XLA's buffer assignment reuses in place.
-
-    This scheduling skeleton is deliberately generic — later async features
-    (shadowed experts, quantized-a2a overlap, decode batching) can reuse it
-    by swapping the stage callables.
-
-    ``dispatch(j)`` produces chunk ``j``'s in-flight value, ``compute(j, v)``
-    transforms it, and ``combine(carry, j, v)`` folds it into ``carry``.
-    """
-    in_dispatch = None            # (j, dispatched chunk j)
-    in_compute = None             # (j, computed chunk j)
-    for t in range(num_chunks + 2):
-        nxt = (t, dispatch(t)) if t < num_chunks else None
-        cmp = (in_dispatch[0], compute(*in_dispatch)) \
-            if in_dispatch is not None else None
-        if in_compute is not None:
-            carry = combine(carry, *in_compute)
-        in_dispatch, in_compute = nxt, cmp
-    return carry
-
-
-def _pad_selection(sel, axis: int, multiple: int):
-    """Zero-pad a ``(w, idx, valid, buf)`` selection's capacity axis up to a
-    multiple of ``multiple``.
-
-    Padded slots carry ``valid == 0`` and ``idx == 0``: their FFN output is
-    exactly zero (no biases anywhere in the expert FFN) and their combine
-    weight is zero, so they contribute nothing — this keeps every chunk
-    equal-split per level even when the plan capacity was clamped to the
-    local token count.
-    """
-    w, idx, valid, buf = sel
-    pad = (-w.shape[axis]) % multiple
-    if pad == 0:
-        return sel
-
-    def _pad(a):
-        widths = [(0, 0)] * a.ndim
-        widths[axis] = (0, pad)
-        return jnp.pad(a, widths)
-    return _pad(w), _pad(idx), _pad(valid), _pad(buf)
-
-
-def moe_apply_a2a_pipelined(params, x, cfg: MoEConfig, ep: EPSpec,
-                            plan: CapacityPlan,
-                            gate_cfg: gating.GateConfig,
+def moe_apply_a2a_pipelined(params, x, cfg, ep, plan, gate_cfg,
                             num_chunks: int = 2):
-    """Chunked, software-pipelined variant of :func:`moe_apply_a2a`.
-
-    Routing, capacities and combine weights are identical to ``a2a``; only
-    the execution schedule differs, so the output is allclose to the sync
-    path (the per-token accumulation order over chunks may differ in the
-    last ulp).  ``num_chunks == 1`` degenerates to the sync schedule.
-    """
-    T, d = x.shape
-    P1 = ep.ep_per_pod
-    n_pods = ep.num_pods
-
-    near, far, gate_out, aux, levels = _route(params, x, cfg, ep, plan,
-                                              gate_cfg)
-    v_near_unpadded = near[2]
-    num_chunks = max(1, int(num_chunks))
-    near = _pad_selection(near, axis=2, multiple=num_chunks)
-    w_near, i_near, v_near, buf_near = near
-    cn = buf_near.shape[2] // num_chunks          # per-chunk near capacity
-    cf = 0
-    if far is not None:
-        far = _pad_selection(far, axis=3, multiple=num_chunks)
-        cf = far[3].shape[3] // num_chunks        # per-chunk far capacity
-
-    def dispatch(j):
-        xin = _dispatch_near(
-            jax.lax.slice_in_dim(buf_near, j * cn, (j + 1) * cn, axis=2),
-            cfg, ep)
-        if far is not None:
-            xin_far = _dispatch_far(
-                jax.lax.slice_in_dim(far[3], j * cf, (j + 1) * cf, axis=3),
-                cfg, ep)
-            xin = jnp.concatenate([xin, xin_far], axis=1)
-        return xin
-
-    def compute(j, xin):
-        # [E_l, P1*cn + Q*P1*cf, d]
-        return expert_ffn(params, xin, cfg, ep, chunk_granular=True)
-
-    def combine(out, j, y_exp):
-        if out is None:
-            out = jnp.zeros((T, d), y_exp.dtype)
-        back = _combine_near(y_exp[:, : P1 * cn], P1, cfg, ep)
-        sl = slice(j * cn, (j + 1) * cn)
-        wgt = (w_near[:, :, sl] * v_near[:, :, sl]).astype(y_exp.dtype)
-        out = out.at[i_near[:, :, sl]].add(back * wgt[..., None])
-        if far is not None:
-            w_far, i_far, v_far, _ = far
-            back_far = _combine_far(y_exp[:, P1 * cn:], n_pods, P1, cfg, ep)
-            slf = slice(j * cf, (j + 1) * cf)
-            wf = (w_far[..., slf] * v_far[..., slf]).astype(y_exp.dtype)
-            out = out.at[i_far[..., slf]].add(back_far * wf[..., None])
-        return out
-
-    out = software_pipeline(num_chunks, dispatch, compute, combine, None)
-
-    if cfg.num_shared_experts:
-        # independent of every chunk: another overlap opportunity for the
-        # scheduler, issued after the pipeline drains.
-        out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
-
-    metrics = _a2a_metrics(gate_out, aux, levels, v_near_unpadded, T, cfg,
-                           gate_cfg)
-    return out.astype(x.dtype), metrics
+    """Chunked, software-pipelined variant of :func:`moe_apply_a2a`."""
+    return _dispatch.dispatch_moe("a2a_pipelined", params, x, cfg=cfg, ep=ep,
+                                  gate_cfg=gate_cfg, plan=plan,
+                                  num_chunks=num_chunks)
 
 
-# ---------------------------------------------------------------------------
-# gather path (decode)
-# ---------------------------------------------------------------------------
-
-
-def moe_apply_gather(params, x, cfg: MoEConfig, ep: EPSpec,
-                     gate_cfg: gating.GateConfig,
+def moe_apply_gather(params, x, cfg, ep, gate_cfg,
                      tokens_replicated: bool = False):
-    """Decode-time MoE: weights stationary, tokens gathered.
-
-    x: [T_local, d].  When ``tokens_replicated`` the same tokens exist on
-    every EP rank already (long_500k batch=1) and no gather/scatter is done.
-    """
-    P1, E_l = ep.ep_per_pod, max(1, -(-cfg.num_experts // ep.ep_world))
-    multipod = ep.pod_axis is not None and ep.num_pods > 1
-    my_data = jax.lax.axis_index(ep.data_axis)
-    my_pod = jax.lax.axis_index(ep.pod_axis) if multipod else jnp.int32(0)
-
-    if tokens_replicated:
-        xg = x
-    else:
-        xg = jax.lax.all_gather(x, ep.data_axis, axis=0, tiled=True)
-        if multipod:
-            xg = jax.lax.all_gather(xg, ep.pod_axis, axis=0, tiled=True)
-
-    gate_out = gating.gate_forward(params["gate"], xg, gate_cfg, None)
-
-    my_rank = my_pod * P1 + my_data
-    my_eids = my_rank * E_l + jnp.arange(E_l)                       # [E_l]
-    # weight of each of my experts for each token (0 if not selected)
-    sel = (gate_out["topk_idx"][:, :, None] == my_eids[None, None, :])
-    w_mine = jnp.sum(jnp.where(
-        sel, gate_out["topk_weight"][:, :, None], 0.0), axis=1)      # [Tg, E_l]
-
-    xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)                    # [E_l, Tg, d]
-    y = expert_ffn(params, xin, cfg, ep)                             # [E_l, Tg, d]
-    y = jnp.einsum("etd,te->td", y, w_mine.astype(y.dtype))          # [Tg, d]
-
-    # combine across EP ranks
-    y = jax.lax.psum(y, ep.data_axis)
-    if multipod:
-        y = jax.lax.psum(y, ep.pod_axis)
-    if not tokens_replicated:
-        T = x.shape[0]
-        start = (my_pod * P1 + my_data) * T if multipod else my_data * T
-        y = jax.lax.dynamic_slice_in_dim(y, start, T, axis=0)
-
-    if cfg.num_shared_experts:
-        y = y + shared_ffn(params, x, cfg, ep).astype(y.dtype)
-    return y.astype(x.dtype), {"aux_loss": jnp.float32(0.0)}
+    """Decode-time MoE: weights stationary, tokens gathered."""
+    return _dispatch.dispatch_moe("gather", params, x, cfg=cfg, ep=ep,
+                                  gate_cfg=gate_cfg,
+                                  tokens_replicated=tokens_replicated)
 
 
-# ---------------------------------------------------------------------------
-# GShard/DeepSpeed-style einsum dispatch (baseline from the paper's §2)
-# ---------------------------------------------------------------------------
-
-
-def moe_apply_einsum(params, x, cfg: MoEConfig, ep: EPSpec,
-                     gate_cfg: gating.GateConfig, capacity: int | None = None):
-    """The classic einsum formulation: one-hot dispatch/combine tensors of
-    shape [T, N, C] route tokens through a zero-padded [N, C, d] buffer.
-
-    This is the DeepSpeed-MoE / GShard baseline the paper describes as
-    introducing "redundant zero computation and extra memory consumption"
-    (§2) — kept for comparison and as the equivalence oracle for the
-    selection-based a2a path.  Runs shard-local (no collectives): suitable
-    for pjit auto-sharding or single-rank tests.
-    """
-    T, d = x.shape
-    N, K = cfg.num_experts, cfg.top_k
-    if capacity is None:
-        capacity = max(1, int(T * K * cfg.capacity_factor / N))
-
-    gate_out = gating.gate_forward(params["gate"], x, gate_cfg, None)
-    aux = gating.aux_loss(gate_out, gate_cfg, None)
-    topk_idx, topk_w = gate_out["topk_idx"], gate_out["topk_weight"]
-
-    # position of each (token, slot) within its expert's capacity buffer
-    dispatch = jnp.zeros((T, N, capacity), jnp.float32)
-    combine = jnp.zeros((T, N, capacity), jnp.float32)
-    counts = jnp.zeros((N,), jnp.int32)
-    for s in range(K):
-        e = topk_idx[:, s]                       # [T]
-        onehot = jax.nn.one_hot(e, N, dtype=jnp.int32)        # [T, N]
-        pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot   # [T, N]
-        pos = jnp.sum(pos_in_e, axis=1) + counts[e]            # [T]
-        keep = pos < capacity
-        slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
-        mask = (onehot.astype(jnp.float32) * keep[:, None].astype(jnp.float32))
-        d_s = mask[:, :, None] * slot[:, None, :]              # [T, N, C]
-        dispatch = dispatch + d_s
-        combine = combine + d_s * topk_w[:, s][:, None, None]
-        counts = counts + jnp.sum(onehot * keep[:, None], axis=0)
-
-    xin = jnp.einsum("tnc,td->ncd", dispatch, x.astype(jnp.float32))
-    y_exp = expert_ffn(params, xin.astype(x.dtype), cfg, ep)   # [N, C, d]
-    y = jnp.einsum("tnc,ncd->td", combine, y_exp.astype(jnp.float32))
-    if cfg.num_shared_experts:
-        y = y + shared_ffn(params, x, cfg, ep).astype(y.dtype)
-    metrics = {"aux_loss": aux,
-               "dropped": 1.0 - dispatch.sum() / (T * K)}
-    return y.astype(x.dtype), metrics
+def moe_apply_einsum(params, x, cfg, ep, gate_cfg,
+                     capacity: Optional[int] = None):
+    """GShard/DeepSpeed einsum baseline (paper §2)."""
+    return _dispatch.dispatch_moe("einsum", params, x, cfg=cfg, ep=ep,
+                                  gate_cfg=gate_cfg, capacity=capacity)

@@ -90,6 +90,16 @@ def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
                 ctx, plan=model_lib.make_plan(
                     arch_cf1, mesh, S, B,
                     {"lb": "even", "ta": "ta", "hir": "hir"}[aux_mode]))
+        if arch.is_moe and kind != "decode" and ctx.plan is not None:
+            # comm–compute overlap: pipelined dispatch with the chunk count
+            # chosen from alpha/beta *measured* on this mesh (cached per
+            # mesh shape), not the ICI/DCI constants.
+            from repro.core import capacity as capacity_lib
+            nc = model_lib.resolve_num_chunks(arch, ctx.plan, ctx.ep, 0,
+                                              mesh=mesh)
+            ctx = _dc.replace(
+                ctx, dispatch="a2a_pipelined", a2a_num_chunks=nc,
+                plan=capacity_lib.align_to_chunks(ctx.plan, nc))
     if ctx_overrides:
         import dataclasses as _dc
         cfo = dict(ctx_overrides)
@@ -148,6 +158,7 @@ def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
         "mesh": "pod2" if multi_pod else "pod1",
         "status": "ok", "note": note, "kind": kind,
         "aux_mode": aux_mode, "optimized": optimized, "tag": tag,
+        "dispatch": ctx.dispatch, "a2a_num_chunks": ctx.a2a_num_chunks,
         "ctx_overrides": {k: str(v) for k, v in (ctx_overrides or {}).items()},
         "n_params": n_params, "active_params": active,
         "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
@@ -212,6 +223,9 @@ def main(argv=None):
                                               aux_mode=args.aux_mode,
                                               optimized=args.opt)
                     if rec["status"] == "ok":
+                        if rec.get("dispatch") == "a2a_pipelined":
+                            tag += (f" [a2a_pipelined "
+                                    f"chunks={rec['a2a_num_chunks']}]")
                         print(f"[ok] {tag}: dom={rec['dominant']} "
                               f"tC={rec['t_compute']*1e3:.2f}ms "
                               f"tM={rec['t_memory']*1e3:.2f}ms "

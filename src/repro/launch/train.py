@@ -42,7 +42,7 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
 
-    import jax  # noqa: E402  (after XLA_FLAGS)
+    import jax  # noqa: E402,F401  (imported after XLA_FLAGS to pin devices)
     from repro.configs.base import RunConfig, get_config
     from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.training import trainer

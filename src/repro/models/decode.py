@@ -20,8 +20,8 @@ import jax.numpy as jnp
 from repro import sharding
 from repro.models import layers, mamba as mamba_lib, mla as mla_lib
 from repro.models import xlstm as xlstm_lib
-from repro.models.transformer import (ModelCtx, SubLayer, _cross_attn,
-                                      _moe_block, layer_plan)
+from repro.models.transformer import (ModelCtx, SubLayer, _moe_block,
+                                      _overrides_hit_groups, layer_plan)
 
 
 def _init_sub_cache(sub: SubLayer, batch: int, max_len: int, ctx: ModelCtx):
@@ -88,7 +88,7 @@ def fill_cross_cache(params, cache, enc_out, ctx: ModelCtx):
     return cache
 
 
-def _decode_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx):
+def _decode_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx, layer_idx=None):
     a = ctx.arch
     h = layers.norm_apply(p["norm1"], x, a.norm)
     if sub.mixer == "attn":
@@ -121,7 +121,7 @@ def _decode_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx):
         x = x + layers.mlp_apply(p["ffn"], h, a.activation)
     elif sub.ffn == "moe":
         h = layers.norm_apply(p["norm2"], x, a.norm)
-        y, _ = _moe_block(p["ffn"], h, ctx, decode=True)
+        y, _ = _moe_block(p["ffn"], h, ctx, decode=True, layer_idx=layer_idx)
         x = x + y
     return x, c
 
@@ -137,19 +137,36 @@ def decode_step(params, cache, tokens, ctx: ModelCtx):
     new_cache = {}
     for i, sub in enumerate(prefix):
         x, new_cache[f"prefix{i}"] = _decode_sublayer(
-            params[f"prefix{i}"], dict(cache[f"prefix{i}"]), x, sub, ctx)
+            params[f"prefix{i}"], dict(cache[f"prefix{i}"]), x, sub, ctx,
+            layer_idx=i)
 
-    def body(x, pc):
-        p, c = pc
-        c = jax.tree_util.tree_map(lambda v: v, c)  # shallow copy
-        for j, sub in enumerate(group):
-            x, c[f"sub{j}"] = _decode_sublayer(p[f"sub{j}"],
-                                               dict(c[f"sub{j}"]), x, sub, ctx)
-        return x, c
+    n_prefix = len(prefix)
+    if _overrides_hit_groups(ctx, n_prefix, group, n_groups, decode=True):
+        # layer-dependent dispatch inside the groups: unroll (mirrors
+        # transformer.forward_features) and restack the per-group caches.
+        new_gs = []
+        for g in range(n_groups):
+            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            cg = jax.tree_util.tree_map(lambda a: a[g], cache["groups"])
+            for j, sub in enumerate(group):
+                x, cg[f"sub{j}"] = _decode_sublayer(
+                    pg[f"sub{j}"], dict(cg[f"sub{j}"]), x, sub, ctx,
+                    layer_idx=n_prefix + g * len(group) + j)
+            new_gs.append(cg)
+        new_cache["groups"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_gs)
+    else:
+        def body(x, pc):
+            p, c = pc
+            c = jax.tree_util.tree_map(lambda v: v, c)  # shallow copy
+            for j, sub in enumerate(group):
+                x, c[f"sub{j}"] = _decode_sublayer(
+                    p[f"sub{j}"], dict(c[f"sub{j}"]), x, sub, ctx)
+            return x, c
 
-    x, new_groups = jax.lax.scan(body, x, (params["groups"],
-                                           cache["groups"]))
-    new_cache["groups"] = new_groups
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               cache["groups"]))
+        new_cache["groups"] = new_groups
     x = layers.norm_apply(params["final_norm"], x, a.norm)
     logits = layers.unembed_apply(params["embed"], x)
     return logits, new_cache

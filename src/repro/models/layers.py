@@ -9,7 +9,6 @@ these functions are mesh-agnostic except where noted.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -3,8 +3,6 @@ and ShapeDtypeStruct input specs for the multi-pod dry-run."""
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Optional
 
 import jax
@@ -13,7 +11,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
-from repro.configs.base import ArchConfig, RunConfig, INPUT_SHAPES
+from repro.configs.base import ArchConfig, INPUT_SHAPES
 from repro.core import capacity, gating, moe as moe_lib, topology
 from repro.models import transformer, decode as decode_lib
 
@@ -78,16 +76,25 @@ def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
 
 
 def resolve_num_chunks(arch: ArchConfig, plan, ep,
-                       num_chunks: int = 0) -> int:
-    """Chunk count for pipelined dispatch; 0 = pick via the overlap model."""
+                       num_chunks: int = 0, *, mesh=None) -> int:
+    """Chunk count for pipelined dispatch; 0 = pick via the overlap model.
+
+    With ``mesh`` given, the overlap model's alpha/beta come from *measured*
+    links (an all-to-all micro-benchmark on that mesh, cached per mesh
+    shape) instead of the ICI/DCI topology constants.
+    """
     if num_chunks > 0:
         return int(num_chunks)
     from repro.core import comm_model
+    links = None
+    if mesh is not None:
+        links = comm_model.measured_moe_links(
+            mesh, data_axis=ep.data_axis, pod_axis=ep.pod_axis)
     terms = comm_model.moe_overlap_terms(
         plan, d_model=arch.d_model, d_ff=arch.moe.d_ff_expert,
         bytes_per_el=2 if arch.jnp_dtype == jnp.bfloat16 else 4,
         num_pods=ep.num_pods, ep_per_pod=ep.ep_per_pod,
-        activation=arch.activation)
+        activation=arch.activation, links=links)
     return comm_model.choose_num_chunks(**terms)
 
 
@@ -97,24 +104,40 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
               use_flash: bool = False,
               use_moe_kernel: bool = False,
               dispatch: str = "a2a",
-              a2a_num_chunks: int = 0) -> transformer.ModelCtx:
-    if dispatch not in ("a2a", "a2a_pipelined"):
-        raise ValueError(f"unknown dispatch {dispatch!r}; "
-                         "expected 'a2a' or 'a2a_pipelined'")
+              a2a_num_chunks: int = 0,
+              dispatch_override: tuple = (),
+              measured_comm: bool = False) -> transformer.ModelCtx:
+    from repro.core import dispatch as dispatch_lib
+
+    # arch-level per-layer overrides are the base; explicit (run-level)
+    # overrides win per layer index.
+    if arch.is_moe and arch.moe.dispatch_override:
+        merged = dict(arch.moe.dispatch_override)
+        merged.update(dict(dispatch_override))
+        dispatch_override = tuple(sorted(merged.items()))
+    else:
+        dispatch_override = tuple(sorted(dict(dispatch_override).items()))
+    for name in (dispatch,) + tuple(n for _, n in dispatch_override):
+        dispatch_lib.get_path(name)   # raises ValueError on unknown names
+
     dispatch_mode = {"lb": "even", "even": "even", "ta": "ta",
                      "hir": "hir", "none": "even"}[aux_mode]
     plan = make_plan(arch, mesh, seq_len, global_batch, dispatch_mode)
     ep = make_ep_spec(arch, mesh)
     gate_cfg = make_gate_cfg(arch, plan, ep, aux_mode)
     num_chunks = 1
-    if plan is not None and dispatch == "a2a_pipelined":
-        num_chunks = resolve_num_chunks(arch, plan, ep, a2a_num_chunks)
+    pipelined = (dispatch == "a2a_pipelined"
+                 or any(n == "a2a_pipelined" for _, n in dispatch_override))
+    if plan is not None and pipelined:
+        num_chunks = resolve_num_chunks(arch, plan, ep, a2a_num_chunks,
+                                        mesh=mesh if measured_comm else None)
         plan = capacity.align_to_chunks(plan, num_chunks)
     return transformer.ModelCtx(
         arch=arch, mesh=mesh, ep=ep, plan=plan, gate_cfg=gate_cfg,
         remat=remat, decode_replicated=decode_replicated,
         use_flash=use_flash, use_moe_kernel=use_moe_kernel,
-        dispatch=dispatch, a2a_num_chunks=num_chunks)
+        dispatch=dispatch, a2a_num_chunks=num_chunks,
+        dispatch_override=dispatch_override)
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,6 @@ core/moe.py); dense compute relies on pjit sharding constraints
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -25,7 +24,7 @@ import numpy as np
 
 from repro import sharding
 from repro.configs.base import ArchConfig
-from repro.core import gating, moe as moe_lib
+from repro.core import dispatch as dispatch_lib, gating, moe as moe_lib
 from repro.core.capacity import CapacityPlan
 from repro.models import layers, mamba as mamba_lib, mla as mla_lib
 from repro.models import xlstm as xlstm_lib
@@ -51,8 +50,14 @@ class ModelCtx:
     use_moe_kernel: bool = False
     remat: bool = False
     decode_replicated: bool = False              # long_500k batch=1
-    dispatch: str = "a2a"                        # "a2a" | "a2a_pipelined"
+    # default MoE dispatch path (any name in the core.dispatch registry:
+    # "a2a" | "a2a_pipelined" | "gather" | "einsum")
+    dispatch: str = "a2a"
     a2a_num_chunks: int = 1                      # resolved by build_ctx
+    # per-layer dispatch override: tuple of (global_layer_idx, path_name)
+    # pairs.  Overrides on scanned group layers force the group loop to
+    # unroll (the schedule becomes layer-dependent, so the HLO does too).
+    dispatch_override: tuple = ()
     # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
     use_blockwise: bool = False                  # flash-style attention HLO
     fused_xent: bool = False                     # vocab-sharded xent
@@ -106,6 +111,16 @@ class ModelCtx:
             num_shared_experts=a.moe.num_shared_experts,
             activation=a.activation, dtype=a.jnp_dtype,
             use_kernel=self.use_moe_kernel, a2a_dtype=self.a2a_dtype)
+
+    def dispatch_for_layer(self, layer_idx: Optional[int],
+                           decode: bool = False) -> str:
+        """Dispatch path name for one layer: the per-layer override when
+        present, else the mode default (decode steps default to the
+        weights-stationary gather path)."""
+        default = "gather" if decode else self.dispatch
+        if layer_idx is None:
+            return default
+        return dict(self.dispatch_override).get(layer_idx, default)
 
 
 # ---------------------------------------------------------------------------
@@ -233,8 +248,13 @@ def _tree_specs_default(tree, special: dict):
     return jax.tree_util.tree_map_with_path(assign, tree)
 
 
-def _moe_block(p, x, ctx: ModelCtx, decode: bool):
-    """x: [B, S, d] (global view). Returns (y, metrics)."""
+def _moe_block(p, x, ctx: ModelCtx, decode: bool, layer_idx=None):
+    """x: [B, S, d] (global view). Returns (y, metrics).
+
+    Resolves the layer's dispatch path through the core.dispatch engine
+    registry (per-layer override via ``ctx.dispatch_override``); every path
+    returns the same uniform metrics schema, so the out_specs never branch.
+    """
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
@@ -245,20 +265,14 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool):
     batch_axes = tuple(a for a in ("pod", "data")
                        if mesh is not None and a in mesh.shape)
     replicated = ctx.decode_replicated
+    name = ctx.dispatch_for_layer(layer_idx, decode)
+    eng = dispatch_lib.make_engine(
+        name, cfg=cfg, ep=ep, gate_cfg=gate_cfg, plan=ctx.plan,
+        num_chunks=max(1, ctx.a2a_num_chunks),
+        tokens_replicated=replicated and decode)
 
     def body(p_local, x_local):
-        xt = x_local.reshape(-1, d)
-        if decode:
-            y, metrics = moe_lib.moe_apply_gather(
-                p_local, xt, cfg, ep, gate_cfg,
-                tokens_replicated=replicated)
-        elif ctx.dispatch == "a2a_pipelined":
-            y, metrics = moe_lib.moe_apply_a2a_pipelined(
-                p_local, xt, cfg, ep, ctx.plan, gate_cfg,
-                num_chunks=max(1, ctx.a2a_num_chunks))
-        else:
-            y, metrics = moe_lib.moe_apply_a2a(
-                p_local, xt, cfg, ep, ctx.plan, gate_cfg)
+        y, metrics = eng(p_local, x_local.reshape(-1, d))
         # average metrics over every mesh axis so outputs are replicated
         for ax in mesh.axis_names:
             metrics = {k: jax.lax.pmean(v, ax) for k, v in metrics.items()}
@@ -270,16 +284,14 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool):
               else P(batch_axes if len(batch_axes) > 1 else
                      (batch_axes[0] if batch_axes else None), None, None))
     fn = shard_map(body, mesh=mesh, in_specs=(pspecs, x_spec),
-                   out_specs=(x_spec, _metric_specs(decode)),
+                   out_specs=(x_spec, _metric_specs()),
                    check_vma=False)
     return fn(p, x)
 
 
-def _metric_specs(decode: bool):
+def _metric_specs():
     from jax.sharding import PartitionSpec as P
-    keys = (["aux_loss"] if decode
-            else ["aux_loss", "frac_near", "frac_far", "dropped"])
-    return {k: P() for k in keys}
+    return {k: P() for k in dispatch_lib.METRIC_KEYS}
 
 
 def _merge_specs(params, partial_specs):
@@ -305,7 +317,7 @@ def _merge_specs(params, partial_specs):
 
 
 def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
-                    aux0=0.0):
+                    aux0=0.0, layer_idx=None):
     a = ctx.arch
     h = layers.norm_apply(p["norm1"], x, a.norm)
     if sub.mixer == "attn":
@@ -333,7 +345,8 @@ def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
         x = x + layers.mlp_apply(p["ffn"], h, a.activation)
     elif sub.ffn == "moe":
         h = layers.norm_apply(p["norm2"], x, a.norm)
-        y, metrics = _moe_block(p["ffn"], h, ctx, decode=False)
+        y, metrics = _moe_block(p["ffn"], h, ctx, decode=False,
+                                layer_idx=layer_idx)
         x = x + y
         aux = aux + metrics["aux_loss"]
     x = sharding.constrain(x, "batch", None, None)
@@ -364,6 +377,24 @@ def _run_encoder(params, frames, ctx: ModelCtx):
     return layers.norm_apply(params["enc_norm"], x, ctx.arch.norm)
 
 
+def _overrides_hit_groups(ctx: ModelCtx, n_prefix: int, group, n_groups: int,
+                          decode: bool = False) -> bool:
+    """True when a per-layer dispatch override actually changes a scanned
+    group layer's dispatch — only then is the unroll (and its n_groups-fold
+    HLO growth) warranted.  Prefix overrides never force an unroll (that
+    loop is already Python-level), and neither do out-of-range indices,
+    overrides on non-MoE sublayers, or overrides equal to the default
+    path."""
+    default = ctx.dispatch_for_layer(None, decode)
+    n_layers = n_prefix + n_groups * len(group)
+    for idx, name in (ctx.dispatch_override or ()):
+        if not (n_prefix <= idx < n_layers) or name == default:
+            continue
+        if group[(idx - n_prefix) % len(group)].ffn == "moe":
+            return True
+    return False
+
+
 def forward_features(params, batch, ctx: ModelCtx):
     """Full-sequence forward up to the final norm. Returns (x, aux)."""
     a = ctx.arch
@@ -384,18 +415,37 @@ def forward_features(params, batch, ctx: ModelCtx):
     aux = jnp.float32(0.0)
     for i, sub in enumerate(prefix):
         x, aux = _apply_sublayer(params[f"prefix{i}"], x, sub, ctx,
-                                 enc_out=enc_out, aux0=aux)
+                                 enc_out=enc_out, aux0=aux, layer_idx=i)
 
-    def body(carry, p):
-        x, aux = carry
-        for j, sub in enumerate(group):
-            x, aux = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
-                                     enc_out=enc_out, aux0=aux)
-        return (x, aux), None
+    n_prefix = len(prefix)
+    if _overrides_hit_groups(ctx, n_prefix, group, n_groups):
+        # a per-layer dispatch override lands inside the scanned groups:
+        # the schedule is layer-dependent, so unroll the group loop (each
+        # group gets its own HLO with its own dispatch path).
+        def run_group(carry, pg, base_idx):
+            x, aux = carry
+            for j, sub in enumerate(group):
+                x, aux = _apply_sublayer(pg[f"sub{j}"], x, sub, ctx,
+                                         enc_out=enc_out, aux0=aux,
+                                         layer_idx=base_idx + j)
+            return x, aux
+        if ctx.remat:
+            run_group = jax.checkpoint(run_group, static_argnums=(2,),
+                                       prevent_cse=False)
+        for g in range(n_groups):
+            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            x, aux = run_group((x, aux), pg, n_prefix + g * len(group))
+    else:
+        def body(carry, p):
+            x, aux = carry
+            for j, sub in enumerate(group):
+                x, aux = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
+                                         enc_out=enc_out, aux0=aux)
+            return (x, aux), None
 
-    if ctx.remat:
-        body = jax.checkpoint(body, prevent_cse=False)
-    (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+        if ctx.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
 
     x = layers.norm_apply(params["final_norm"], x, a.norm)
     return x, aux / max(1, n_groups * len(group))

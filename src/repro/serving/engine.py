@@ -8,17 +8,43 @@ what the decode_32k / long_500k dry-runs lower.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro import sharding
-from repro.models import decode as decode_lib, layers, model as model_lib
+from repro.models import decode as decode_lib, model as model_lib
 from repro.models import transformer
 
 
-def make_decode_step(ctx: transformer.ModelCtx):
+def _with_overrides(ctx: transformer.ModelCtx, dispatch_override):
+    """Serving-side per-layer dispatch override (e.g. force a prefill MoE
+    layer onto ``a2a_pipelined``, or a decode layer off the gather path).
+    Names resolve through the core.dispatch engine registry; entries merge
+    per layer index with the ctx's existing (arch/run-level) overrides,
+    serving-side entries winning."""
+    if dispatch_override is None:
+        return ctx
+    from repro.core import capacity, dispatch as dispatch_lib
+    for _, name in dispatch_override:
+        dispatch_lib.get_path(name)
+    merged = dict(ctx.dispatch_override)
+    merged.update(dict(dispatch_override))
+    ctx = dataclasses.replace(ctx,
+                              dispatch_override=tuple(sorted(merged.items())))
+    # a pipelined override needs a resolved chunk count + chunk-aligned
+    # plan; build_ctx does this for overrides it saw, so only fill the gap
+    if (ctx.plan is not None and ctx.a2a_num_chunks <= 1
+            and any(n == "a2a_pipelined" for _, n in ctx.dispatch_override)):
+        nc = model_lib.resolve_num_chunks(ctx.arch, ctx.plan, ctx.ep, 0)
+        ctx = dataclasses.replace(
+            ctx, a2a_num_chunks=nc,
+            plan=capacity.align_to_chunks(ctx.plan, nc))
+    return ctx
+
+
+def make_decode_step(ctx: transformer.ModelCtx, dispatch_override=None):
+    ctx = _with_overrides(ctx, dispatch_override)
+
     def step(params, cache, tokens):
         rules = model_lib.default_rules(ctx.mesh) if ctx.mesh else None
         import contextlib
@@ -30,13 +56,15 @@ def make_decode_step(ctx: transformer.ModelCtx):
     return step
 
 
-def make_prefill(ctx: transformer.ModelCtx):
+def make_prefill(ctx: transformer.ModelCtx, dispatch_override=None):
     """Full-sequence forward returning last-position logits.
 
     Cache materialization for subsequent decode is done by running the
     forward; for the dry-run the logits path is what matters (the cache
     write is exercised by decode_step itself).
     """
+    ctx = _with_overrides(ctx, dispatch_override)
+
     def prefill(params, batch):
         rules = model_lib.default_rules(ctx.mesh) if ctx.mesh else None
         import contextlib

@@ -104,7 +104,8 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
                               global_batch=run.global_batch,
                               aux_mode=aux_mode, remat=run.remat,
                               dispatch=run.dispatch,
-                              a2a_num_chunks=run.a2a_num_chunks)
+                              a2a_num_chunks=run.a2a_num_chunks,
+                              dispatch_override=run.dispatch_override)
     rules = model_lib.default_rules(mesh)
     key = jax.random.PRNGKey(run.seed)
     with mesh, sharding.axis_rules(rules):

@@ -1,7 +1,6 @@
 """Unit tests for the HLO collective parser and roofline math
 (launch/analysis.py) — these guard the §Roofline numbers."""
 
-import numpy as np
 import pytest
 
 from repro.launch import analysis

@@ -96,3 +96,30 @@ def test_property_penalties_positive_mean_one(n_levels_seed, _):
     p = gating.ta_penalties(ratios)
     assert all(x > 0 for x in p)
     assert np.mean(p) == pytest.approx(1.0, rel=1e-6)
+
+
+def test_ta_penalties_softmax_norm():
+    """Pin the (fixed) softmax normalization: population mean 1 (also under
+    level-size weighting), ratio ordering preserved, spread compressed vs
+    the plain "sum" norm, and equality in the degenerate uniform case."""
+    ratios = (2.0, 1.0, 0.25)
+    sizes = (2, 6, 24)
+    p_sum = np.asarray(gating.ta_penalties(ratios, norm="sum",
+                                           level_sizes=sizes))
+    p_soft = np.asarray(gating.ta_penalties(ratios, norm="softmax",
+                                            level_sizes=sizes))
+    w = np.asarray(sizes, np.float64)
+    for p in (p_sum, p_soft):
+        assert float((p * w).sum() / w.sum()) == pytest.approx(1.0, rel=1e-9)
+    # smaller capacity ratio -> larger penalty, in both norms
+    assert np.all(np.diff(p_sum) > 0) and np.all(np.diff(p_soft) > 0)
+    # the exp reweighting genuinely changes the penalties ...
+    assert not np.allclose(p_soft, p_sum)
+    # ... and with equal ratios both norms collapse to all-ones
+    uniform = gating.ta_penalties((1.0, 1.0, 1.0), norm="softmax")
+    np.testing.assert_allclose(uniform, (1.0, 1.0, 1.0), rtol=1e-12)
+
+
+def test_ta_penalties_rejects_unknown_norm():
+    with pytest.raises(ValueError, match="unknown norm"):
+        gating.ta_penalties((1.0, 1.0, 1.0), norm="l2")

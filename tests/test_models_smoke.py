@@ -10,7 +10,7 @@ import pytest
 
 from repro import sharding
 from repro.configs.base import ARCH_IDS, RunConfig, get_config
-from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
+from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import model as model_lib, transformer
 from repro.optim import adamw
 from repro.training import trainer

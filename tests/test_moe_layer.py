@@ -2,8 +2,6 @@
 identity collectives, which isolates the selection/combine logic; the
 gather path must match a dense hand-computed MoE exactly."""
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """Optimizer, data pipeline, checkpoint, sharding-rule unit tests."""
 
-import os
 
 import jax
 import jax.numpy as jnp
