@@ -13,7 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 
-from repro.core import gating, moe as moe_lib
+from repro.core import dispatch as dl, gating
 from repro.core.capacity import make_plan
 
 
@@ -33,12 +33,12 @@ def _layer_stats(fn, *args):
 
 def run(T=512, D=128, F=256, N=16, K=2):
     mesh = make_mesh((1, 1), ("data", "model"))
-    cfg = moe_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+    cfg = dl.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
                             capacity_factor=1.25, dtype=jnp.float32)
-    ep = moe_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
+    ep = dl.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
                         data_axis="data", model_axis="model")
     gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="lb")
-    params = moe_lib.init_moe_params(jax.random.PRNGKey(0), cfg, ep,
+    params = dl.init_moe_params(jax.random.PRNGKey(0), cfg, ep,
                                      gate_cfg)
     plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
                      capacity_factor=1.25, num_pods=1, ep_per_pod=1,
@@ -50,12 +50,13 @@ def run(T=512, D=128, F=256, N=16, K=2):
                          out_specs=P(), check_vma=False)
 
     def f_sel(p, xx):
-        return moe_lib.moe_apply_a2a(p, xx, cfg, ep, plan, gate_cfg)[0]
+        return dl.dispatch_moe("a2a", p, xx, cfg=cfg, ep=ep,
+                               gate_cfg=gate_cfg, plan=plan)[0]
 
     def f_ein(p, xx):
         cap = max(1, int(T * K * cfg.capacity_factor / N))
-        return moe_lib.moe_apply_einsum(p, xx, cfg, ep, gate_cfg,
-                                        capacity=cap)[0]
+        return dl.dispatch_moe("einsum", p, xx, cfg=cfg, ep=ep,
+                               gate_cfg=gate_cfg, capacity=cap)[0]
 
     rows = []
     with mesh:

@@ -1,13 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
+machine-readable ``BENCH_dispatch.json`` with the same rows plus run
+metadata, so CI can archive the perf trajectory (step times and
+chunk-chooser verdicts per dispatch path / topology).  Usage:
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only table1 fig4
     PYTHONPATH=src python -m benchmarks.run --quick    # smaller trainings
+    PYTHONPATH=src python -m benchmarks.run --only overlap \
+        --json BENCH_dispatch.json
 """
 
 import argparse
+import json
+import platform
 import time
 
 
@@ -15,6 +22,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata as JSON "
+                         "(e.g. BENCH_dispatch.json)")
     args = ap.parse_args()
 
     from benchmarks import (ablation_dispatch, fig3_convergence,
@@ -33,6 +43,7 @@ def main() -> None:
     }
     sel = args.only or list(suites)
     rows = []
+    suite_times = {}
     for name in sel:
         print(f"\n==== {name} ====", flush=True)
         t0 = time.time()
@@ -42,11 +53,33 @@ def main() -> None:
             import traceback
             traceback.print_exc(limit=6)
             rows.append((f"{name}_FAILED", 0.0, f"{type(e).__name__}"))
-        print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
+        suite_times[name] = round(time.time() - t0, 1)
+        print(f"[{name} done in {suite_times[name]}s]", flush=True)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+
+    if args.json:
+        payload = {
+            "schema": "bench_dispatch/v1",
+            "suites": sel,
+            "suite_seconds": suite_times,
+            "quick": bool(args.quick),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "rows": [{"name": n, "us_per_call": round(us, 2), "derived": d}
+                     for n, us, d in rows],
+        }
+        try:
+            import jax
+            payload["jax"] = jax.__version__
+            payload["device_count"] = jax.device_count()
+        except Exception:
+            pass
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[wrote {args.json}: {len(rows)} rows]")
 
 
 if __name__ == "__main__":

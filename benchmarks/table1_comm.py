@@ -46,6 +46,13 @@ def run():
     sp_cont = t_even.contention / t_ta.contention
     sp_lb = t_even.lower_bound / max(t_ta.lower_bound, 1e-12)
     sp_eq7 = t_even.contention / t_eq7.contention
+    # level-indexed traffic: bytes crossing each topology level (level 1 =
+    # intra-switch, level 2 = inter-switch) — the schema the dispatch
+    # engine's frac_by_level metric mirrors at runtime
+    for label, t in (("even", t_even), ("uneven", t_ta), ("eq7", t_eq7)):
+        by_level = " ".join(f"L{lvl}={b/1e6:.1f}MB"
+                            for lvl, b in sorted(t.per_level_bytes.items()))
+        print(f"bytes by level [{label:6s}]: {by_level}")
     print(f"total (contention): even {t_even.contention*1e6:.0f}us  "
           f"uneven {t_ta.contention*1e6:.0f}us  speedup {sp_cont:.2f}x  "
           f"(paper ~1.3x)")

@@ -17,14 +17,21 @@ from repro.training import trainer
 
 def main():
     # 1. The topology plan: what TA-MoE computes before training starts.
+    # The plan API is level-indexed: one capacity multiplier per topology
+    # level, however deep the hierarchy is.
     print("== TA-MoE dispatch plan for the 2-pod production mesh ==")
     tm = topology.tpu_topology(num_pods=2, devices_per_pod=16)
     ratios = topology.per_level_ratios(tm)
-    print(f"  per-level capacity multipliers (self/ICI/DCI): "
+    print(f"  capacity multipliers by level (0=self .. {len(ratios)-1}): "
           f"{[round(float(r), 3) for r in ratios]}")
     print("  -> intra-pod chunks are "
           f"{ratios[1]/ratios[2]:.1f}x larger than cross-pod chunks "
-          "(= the ICI/DCI bandwidth ratio, Eq. 7 of the paper)\n")
+          "(= the ICI/DCI bandwidth ratio, Eq. 7 of the paper)")
+    # the same solver on a 3-tier hierarchy (pods of nodes of devices):
+    tm3 = topology.tree_topology_nd((2, 2, 8))
+    r3 = topology.per_level_ratios(tm3)
+    print(f"  3-tier [[8,8],[8,8]]-style mesh multipliers: "
+          f"{[round(float(r), 3) for r in r3]}\n")
 
     # 2. Train the paper's model (reduced) with the topology-aware loss.
     mesh = make_mesh((1, 1), ("data", "model"))

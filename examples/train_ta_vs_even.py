@@ -51,8 +51,11 @@ def main():
         results[mode] = res
     print("\n=== summary (paper Fig. 3: curves should coincide) ===")
     for mode, res in results.items():
+        fb = res.metrics_history[-1].get("frac_by_level")
+        frac = ("  frac_by_level=[" + ",".join(f"{v:.2f}" for v in fb) + "]"
+                if fb else "")
         print(f"  {mode}: final loss {res.losses[-1]:.4f}  "
-              f"({res.steps_per_sec:.2f} steps/s)")
+              f"({res.steps_per_sec:.2f} steps/s){frac}")
     gap = abs(results["ta"].losses[-1] - results["lb"].losses[-1])
     print(f"  convergence gap: {gap:.4f} "
           f"({'OK — TA does not hurt accuracy' if gap < 0.1 else 'LARGE'})")

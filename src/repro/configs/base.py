@@ -154,6 +154,22 @@ class RunConfig:
     # per-layer (global_layer_idx, path_name) pairs; wins over
     # MoEArch.dispatch_override for the same layer index.
     dispatch_override: tuple = ()
+    # Nested topology spec in the paper's Fig. 2 notation, e.g.
+    # ((2, 2), (2, 2)) for a 3-tier pod x node x data hierarchy of 8
+    # devices.  Empty = take the hierarchy from the mesh the caller built.
+    # Launchers (repro.launch.train / mesh.mesh_from_topology) turn this
+    # into an N-tier mesh, and trainer.train validates the mesh it is
+    # handed against this spec; the level-indexed DispatchPlan then gets
+    # one capacity per tier automatically.
+    topology: tuple = ()
+
+    def mesh_axis_sizes(self) -> tuple:
+        """Outermost-first hierarchy sizes of ``topology`` (empty tuple
+        when no spec was given)."""
+        if not self.topology:
+            return ()
+        from repro.core.topology import axis_sizes_from_spec
+        return axis_sizes_from_spec(self.topology)
 
 
 ARCH_IDS = (

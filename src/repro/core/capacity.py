@@ -1,9 +1,18 @@
-"""Per-level static capacity tables for the hierarchical all-to-all.
+"""Level-indexed static capacity plans for the hierarchical all-to-all.
 
 TA-MoE's Eq. (7) solution is piecewise-constant per topology level, so the
 paper's DeepSpeed-style local capacities ``C_ie ∝ c_hat_ie`` reduce to one
-integer capacity per (source, destination-level) pair.  These feed the
-equal-split all-to-all stages of core/moe.py with fully static shapes.
+integer capacity per (source, destination-level) pair.  :class:`DispatchPlan`
+carries that vector — one capacity per *dispatch stage* of the EP mesh
+hierarchy — and feeds the equal-split all-to-all stages of
+``core/dispatch`` with fully static shapes.
+
+Dispatch stages vs topology levels: stage ``s`` delivers over the innermost
+``s + 1`` mesh axes and serves topology level ``s + 1``; the self level
+(level 0) is folded into stage 0 because equal-split ``all_to_all`` keeps
+the self chunk on-device anyway.  A 2-axis ``pod x data`` mesh therefore
+has stages ``(near, far)`` — the PR-2-era pair — and an N-axis mesh has N
+stages indexed by level.
 """
 
 from __future__ import annotations
@@ -19,96 +28,215 @@ def _round_to(x: float, multiple: int) -> int:
     return max(multiple, int(math.ceil(x / multiple)) * multiple)
 
 
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def default_axis_names(n: int) -> tuple:
+    """Canonical EP mesh-axis names, outermost-first: pod / node* / data."""
+    if n == 1:
+        return ("data",)
+    if n == 2:
+        return ("pod", "data")
+    mids = tuple("node" if n == 3 else f"node{i}" for i in range(n - 2))
+    return ("pod",) + mids + ("data",)
+
+
 @dataclasses.dataclass(frozen=True)
-class CapacityPlan:
+class DispatchPlan:
     """Static dispatch capacities for one MoE layer on one EP topology.
 
-    ``level_of_stage[s]`` maps all-to-all stage s to a topology level and
-    ``cap_per_stage[s]`` is the per-(source device, expert) token capacity
-    used for that stage.  Even dispatch (the DeepSpeed-MoE / FastMoE
-    baseline) is the same structure with all capacities equal.
+    ``caps[s]`` is the per-(source device, expert) token capacity of
+    dispatch stage ``s`` (0 = innermost; ``caps[s] == 0`` marks an inactive
+    stage, e.g. the far stage of a single-pod mesh).  ``level_axes[s]`` is
+    the mesh-axis chain stage ``s``'s exchange traverses (outermost-first),
+    and ``axis_sizes`` are the EP mesh extents those chains are drawn from.
+    Even dispatch (the DeepSpeed-MoE / FastMoE baseline) is the same
+    structure with all active capacities equal.
+
+    ``cap_near`` / ``cap_far`` (and the chunk variants) are deprecated
+    2-level aliases kept for PR-2-era callers; new code indexes ``caps``.
     """
 
     tokens_per_device: int          # S_local * k assignments emitted
     num_experts: int                # N (global routed experts)
     experts_per_rank: int           # E_local on each EP rank
-    cap_near: int                   # per-(src, expert) tokens, intra-pod
-    cap_far: int                    # per-(src, expert) tokens, inter-pod (0 if single level)
-    ratios: tuple                   # per-level multipliers from Eq. (7)
+    caps: tuple                     # per-stage per-(src, expert) capacities
+    ratios: tuple                   # full per-level multipliers from Eq. (7)
     mode: str                       # "even" | "ta" | "hir"
+    axis_sizes: tuple = ()          # EP mesh extents, outermost-first
+    level_axes: tuple = (("data",),)  # mesh-axis chain per stage
+    level_sizes: tuple = ()         # |G_l| member counts per topology level
     num_chunks: int = 1             # pipelined dispatch: chunks per capacity
 
     @property
+    def num_stages(self) -> int:
+        return len(self.caps)
+
+    @property
     def is_hierarchical(self) -> bool:
-        return self.cap_far > 0
+        return any(c > 0 for c in self.caps[1:])
+
+    def active_stages(self) -> tuple:
+        """Indices of stages with non-zero capacity."""
+        return tuple(s for s, c in enumerate(self.caps) if c > 0)
+
+    def chunk_cap(self, stage: int) -> int:
+        """Per-chunk capacity of one stage (capacities are chunk-aligned)."""
+        return self.caps[stage] // self.num_chunks
+
+    def stage_dests(self, stage: int) -> int:
+        """Remote destination ranks served by one stage."""
+        n = len(self.axis_sizes)
+        k = n - stage - 1
+        return (self.axis_sizes[k] - 1) * _prod(self.axis_sizes[k + 1:])
+
+    def stage_block(self, stage: int) -> int:
+        """Ranks addressed by one stage's capacity buffer — the remote
+        destinations plus the lower-stage block routing masks out (whose
+        padded rows the expert FFN still computes)."""
+        n = len(self.axis_sizes)
+        return _prod(self.axis_sizes[n - stage - 1:])
+
+    # --- deprecated 2-level aliases (PR-2 compat) --------------------------
+
+    @property
+    def cap_near(self) -> int:
+        """Deprecated: ``caps[0]``."""
+        return self.caps[0]
+
+    @property
+    def cap_far(self) -> int:
+        """Deprecated: ``caps[1]`` (0 when the plan has a single stage)."""
+        return self.caps[1] if len(self.caps) > 1 else 0
 
     @property
     def chunk_near(self) -> int:
-        """Per-chunk near capacity (capacities are chunk-aligned)."""
-        return self.cap_near // self.num_chunks
+        """Deprecated: per-chunk stage-0 capacity."""
+        return self.chunk_cap(0)
 
     @property
     def chunk_far(self) -> int:
+        """Deprecated: per-chunk stage-1 capacity."""
         return self.cap_far // self.num_chunks
 
 
-def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
-              capacity_factor: float, num_pods: int, ep_per_pod: int,
-              mode: str = "ta", hir_ratio: float = 4.0,
-              round_multiple: int = 8) -> CapacityPlan:
-    """Build the per-level capacity plan.
+#: Deprecated name for :class:`DispatchPlan` (the PR-2 near/far-era class).
+CapacityPlan = DispatchPlan
+
+
+def stage_ratio(ratios, level_sizes, stage: int) -> float:
+    """Eq. (7) capacity multiplier for one dispatch stage.
+
+    Stage ``s`` serves topology level ``s + 1``.  Degenerate
+    single-member-level rule, stated explicitly: when a level has no
+    members beyond self (``level_sizes[s + 1] == 0``, e.g. one device per
+    pod), its Eq. (7) ratio is 0 by convention — for stage 0, which also
+    carries the folded-in self traffic, the *self* ratio
+    (``ratios[0]``) applies instead so the self chunk is never starved;
+    for any outer stage the stage is simply inactive (capacity 0).
+    """
+    if level_sizes[stage + 1] > 0:
+        return float(ratios[stage + 1])
+    return float(ratios[0]) if stage == 0 else 0.0
+
+
+def make_dispatch_plan(*, tokens_per_device: int, num_experts: int,
+                       top_k: int, capacity_factor: float,
+                       axis_sizes, axis_names=None, mode: str = "ta",
+                       hir_ratio: float = 4.0, round_multiple: int = 8,
+                       comm=None) -> DispatchPlan:
+    """Build the level-indexed capacity plan for an N-axis EP hierarchy.
+
+    ``axis_sizes`` are the EP mesh extents outermost-first (e.g.
+    ``(pods, nodes, data)``); ``axis_names`` default to the canonical
+    pod/node/data naming.  ``comm`` optionally supplies the per-level
+    alpha-beta :class:`~repro.core.topology.CommModel` (defaults to the
+    hardware-constant ladder of :func:`~repro.core.topology.tree_topology_nd`).
 
     mode="even": uniform capacity  C = k*S*cf/N         (paper baseline)
-    mode="ta"  : per-level C_l = ratio_l * C            (Eq. 7)
-    mode="hir" : FasterMoE-style compulsory ratio — intra capacity is
-                 ``hir_ratio`` times the inter capacity regardless of beta,
-                 renormalized to preserve total sent volume.
+    mode="ta"  : per-stage C_s = ratio_{s+1} * C        (Eq. 7)
+    mode="hir" : FasterMoE-style compulsory ratio — stage-0 capacity is
+                 ``hir_ratio`` times the remote capacity regardless of
+                 beta, renormalized to preserve total sent volume.
     """
-    ep_world = num_pods * ep_per_pod
+    sizes = tuple(int(s) for s in axis_sizes)
+    n = len(sizes)
+    names = tuple(axis_names) if axis_names else default_axis_names(n)
+    assert len(names) == n, (names, sizes)
+    ep_world = _prod(sizes)
     experts_per_rank = max(1, math.ceil(num_experts / ep_world))
     assignments = tokens_per_device * top_k
     # even per-(src, expert) capacity
     c_even = assignments * capacity_factor / num_experts
 
-    model = topo_lib.tpu_topology(num_pods, ep_per_pod)
-    ratios = topo_lib.per_level_ratios(model)  # [L]; level 0=self,1=ICI,2=DCI
+    model = comm or topo_lib.tree_topology_nd(sizes)
+    ratios = topo_lib.per_level_ratios(model)        # [n + 1]
+    level_sizes = tuple(int(x) for x in model.topo.level_sizes(0))
+
+    def active(s: int) -> bool:
+        return s == 0 or sizes[n - s - 1] > 1
 
     if mode == "even":
-        near = far = c_even
+        want = [c_even if active(s) else 0.0 for s in range(n)]
     elif mode == "ta":
-        # level 1 governs intra-pod targets, level 2 inter-pod.  Level 0
-        # (self) is folded into the intra-pod stage: the self chunk never
-        # leaves the device, all_to_all keeps it local.  With a single
-        # device per pod level 1 has no members (its ratio is 0 by
-        # convention) and the near stage carries only self traffic.
-        near = c_even * float(ratios[1] if ep_per_pod > 1 else ratios[0])
-        far = c_even * float(ratios[2]) if num_pods > 1 else 0.0
+        want = [c_even * stage_ratio(ratios, level_sizes, s) if active(s)
+                else 0.0 for s in range(n)]
     elif mode == "hir":
-        if num_pods == 1:
-            near, far = c_even, 0.0
+        n_near = level_sizes[0] + level_sizes[1]
+        n_far = sum(level_sizes[2:])
+        if n_far == 0:
+            want = [c_even if active(s) else 0.0 for s in range(n)]
         else:
             # hard ratio near:far = hir_ratio:1, preserving the total
-            n_near, n_far = ep_per_pod, (num_pods - 1) * ep_per_pod
             total = c_even * (n_near + n_far)
             far = total / (n_near * hir_ratio + n_far)
-            near = far * hir_ratio
+            want = [far * hir_ratio if s == 0 else
+                    (far if active(s) else 0.0) for s in range(n)]
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    cap_near = _round_to(near, round_multiple)
-    cap_far = _round_to(far, round_multiple) if (num_pods > 1) else 0
-    return CapacityPlan(tokens_per_device=tokens_per_device,
+    caps = tuple(_round_to(w, round_multiple) if w > 0 else 0 for w in want)
+    level_axes = tuple(names[n - s - 1:] for s in range(n))
+    return DispatchPlan(tokens_per_device=tokens_per_device,
                         num_experts=num_experts,
                         experts_per_rank=experts_per_rank,
-                        cap_near=cap_near, cap_far=cap_far,
-                        ratios=tuple(float(r) for r in ratios), mode=mode)
+                        caps=caps,
+                        ratios=tuple(float(r) for r in ratios), mode=mode,
+                        axis_sizes=sizes, level_axes=level_axes,
+                        level_sizes=level_sizes)
 
 
-def align_to_chunks(plan: CapacityPlan, num_chunks: int) -> CapacityPlan:
+def make_plan(*, tokens_per_device: int, num_experts: int, top_k: int,
+              capacity_factor: float, num_pods: int, ep_per_pod: int,
+              mode: str = "ta", hir_ratio: float = 4.0,
+              round_multiple: int = 8) -> DispatchPlan:
+    """2-level (pod x data) wrapper over :func:`make_dispatch_plan`.
+
+    Kept as the PR-2-era entry point; produces byte-identical capacities to
+    the near/far implementation it replaces (same ``tpu_topology`` model,
+    same rounding).
+    """
+    if num_pods > 1:
+        sizes, names = (num_pods, ep_per_pod), ("pod", "data")
+    else:
+        sizes, names = (ep_per_pod,), ("data",)
+    return make_dispatch_plan(
+        tokens_per_device=tokens_per_device, num_experts=num_experts,
+        top_k=top_k, capacity_factor=capacity_factor, axis_sizes=sizes,
+        axis_names=names, mode=mode, hir_ratio=hir_ratio,
+        round_multiple=round_multiple,
+        comm=topo_lib.tpu_topology(num_pods, ep_per_pod))
+
+
+def align_to_chunks(plan: DispatchPlan, num_chunks: int) -> DispatchPlan:
     """Round the plan's capacities up to multiples of ``num_chunks``.
 
     The pipelined dispatch slices each capacity buffer into ``num_chunks``
-    equal static chunks per level; rounding *up* preserves losslessness (a
+    equal static chunks per stage; rounding *up* preserves losslessness (a
     chunk-aligned plan never drops a token the unaligned plan kept — padding
     slots ride along as zero-weight rows).  ``num_chunks == 1`` returns the
     plan unchanged.
@@ -116,20 +244,24 @@ def align_to_chunks(plan: CapacityPlan, num_chunks: int) -> CapacityPlan:
     num_chunks = max(1, int(num_chunks))
     if num_chunks == 1:
         return dataclasses.replace(plan, num_chunks=1)
-    cap_near = _round_to(plan.cap_near, num_chunks)
-    cap_far = _round_to(plan.cap_far, num_chunks) if plan.cap_far else 0
-    return dataclasses.replace(plan, cap_near=cap_near, cap_far=cap_far,
-                               num_chunks=num_chunks)
+    caps = tuple(_round_to(c, num_chunks) if c else 0 for c in plan.caps)
+    return dataclasses.replace(plan, caps=caps, num_chunks=num_chunks)
 
 
-def a2a_bytes(plan: CapacityPlan, d_model: int, bytes_per_el: int,
-              num_pods: int, ep_per_pod: int) -> dict:
+def a2a_bytes(plan: DispatchPlan, d_model: int, bytes_per_el: int,
+              num_pods: int = 0, ep_per_pod: int = 0) -> dict:
     """Bytes each device moves per all-to-all stage (send side), for the
-    roofline collective term and the benchmark comm model."""
+    roofline collective term and the benchmark comm model.
+
+    Returns ``by_level`` (one entry per dispatch stage) plus the deprecated
+    ``near_bytes`` / ``far_bytes`` 2-level aliases.  ``num_pods`` /
+    ``ep_per_pod`` are accepted for backward compatibility and ignored —
+    the plan itself carries the mesh extents.
+    """
     E = plan.experts_per_rank
-    near = plan.cap_near * E * (ep_per_pod - 1) * d_model * bytes_per_el
-    far = 0
-    if plan.cap_far:
-        far = (plan.cap_far * E * (num_pods - 1) * ep_per_pod
-               * d_model * bytes_per_el)
-    return {"near_bytes": near, "far_bytes": far}
+    by_level = tuple(plan.caps[s] * E * plan.stage_dests(s)
+                     * d_model * bytes_per_el if plan.caps[s] else 0
+                     for s in range(plan.num_stages))
+    return {"by_level": by_level,
+            "near_bytes": by_level[0],
+            "far_bytes": sum(by_level[1:])}

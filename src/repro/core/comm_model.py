@@ -143,44 +143,89 @@ def choose_num_chunks(*, t_exchange: float, t_compute: float,
     return int(best)
 
 
-def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
-                      num_pods: int, ep_per_pod: int,
-                      activation: str = "swiglu",
-                      peak_flops: float = 197e12,
-                      links: dict | None = None) -> dict:
-    """Alpha-beta inputs for the overlap model from a capacity plan.
-
-    Exchange time charges each level's send bytes against its link
-    bandwidth (the two stages share the per-device NIC, so they are summed
-    — the conservative serialization the contention model also assumes);
-    compute time is the grouped expert FFN's FLOPs at peak.
-
-    ``links`` optionally carries measured :class:`LinkEstimate` objects
-    (keys ``"near"`` / ``"far"``, from :func:`measured_moe_links`); any
-    level without a measurement falls back to the ICI/DCI topology
-    constants.
-    """
+def _stage_constants(plan, stage: int):
+    """Fallback (alpha, beta) ladder for one dispatch stage: innermost ICI,
+    outermost DCI, intermediate intra-pod DCN."""
     from repro.core import topology as topo_lib
+    last = plan.num_stages - 1
+    if stage == 0:
+        return topo_lib.ICI_ALPHA, 1.0 / topo_lib.ICI_BW
+    if stage == last:
+        return topo_lib.DCI_ALPHA, 1.0 / topo_lib.DCI_BW
+    return topo_lib.NODE_ALPHA, 1.0 / topo_lib.NODE_BW
+
+
+def _stage_link(plan, stage: int, links: dict):
+    """Measured LinkEstimate for one stage, if any.
+
+    ``links`` may be keyed by mesh-axis name (:func:`measured_ep_links`) or
+    by the legacy ``"near"`` / ``"far"`` pair; the stage's *outermost* hop
+    is the bottleneck link it is charged against.
+    """
+    axis = plan.level_axes[stage][0] if stage < len(plan.level_axes) else None
+    li = links.get(axis)
+    if li is None:
+        li = links.get("near" if stage == 0 else "far")
+    return li
+
+
+def stage_overlap_terms(plan, *, d_model: int, bytes_per_el: int,
+                        links: dict | None = None) -> list:
+    """Per-dispatch-stage ``{stage, bytes, alpha, beta, t_exchange}`` rows.
+
+    Each stage's send bytes are charged against its outermost hop's link
+    (measured when available, ladder constants otherwise) — the
+    level-indexed generalization of the old near/far split.
+    """
     from repro.core.capacity import a2a_bytes
 
     links = links or {}
-    near_l, far_l = links.get("near"), links.get("far")
-    beta_near = near_l.beta if near_l else 1.0 / topo_lib.ICI_BW
-    beta_far = far_l.beta if far_l else 1.0 / topo_lib.DCI_BW
+    b = a2a_bytes(plan, d_model, bytes_per_el)
+    rows = []
+    for s in range(plan.num_stages):
+        if not plan.caps[s]:
+            continue
+        alpha_c, beta_c = _stage_constants(plan, s)
+        li = _stage_link(plan, s, links)
+        alpha = li.alpha if li else alpha_c
+        beta = li.beta if li else beta_c
+        rows.append({"stage": s, "bytes": b["by_level"][s],
+                     "alpha": alpha, "beta": beta,
+                     "t_exchange": b["by_level"][s] * beta})
+    return rows
 
-    b = a2a_bytes(plan, d_model, bytes_per_el, num_pods, ep_per_pod)
-    t_exchange = (b["near_bytes"] * beta_near + b["far_bytes"] * beta_far)
+
+def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
+                      num_pods: int = 0, ep_per_pod: int = 0,
+                      activation: str = "swiglu",
+                      peak_flops: float = 197e12,
+                      links: dict | None = None) -> dict:
+    """Alpha-beta inputs for the overlap model from a dispatch plan.
+
+    Exchange time charges each stage's send bytes against its link
+    bandwidth (all stages share the per-device NIC, so they are summed
+    — the conservative serialization the contention model also assumes);
+    compute time is the grouped expert FFN's FLOPs at peak; alpha is the
+    slowest active stage's per-collective latency (what chunking pays).
+
+    ``links`` optionally carries measured :class:`LinkEstimate` objects
+    keyed by mesh-axis name (:func:`measured_ep_links`) or by the legacy
+    ``"near"`` / ``"far"`` pair (:func:`measured_moe_links`); any stage
+    without a measurement falls back to the ladder constants.
+    ``num_pods`` / ``ep_per_pod`` are accepted for backward compatibility
+    and ignored — the plan carries the mesh extents.
+    """
+    stages = stage_overlap_terms(plan, d_model=d_model,
+                                 bytes_per_el=bytes_per_el, links=links)
+    t_exchange = sum(r["t_exchange"] for r in stages)
     # expert rows this rank computes per layer: every (src rank, expert,
-    # capacity slot) lands exactly one row
-    rows = plan.cap_near * plan.experts_per_rank * ep_per_pod
-    if plan.cap_far:
-        rows += plan.cap_far * plan.experts_per_rank * num_pods * ep_per_pod
+    # capacity slot) lands exactly one row — including the masked
+    # lower-stage padding block of each outer stage's buffer
+    rows = sum(plan.caps[s] * plan.experts_per_rank * plan.stage_block(s)
+               for s in range(plan.num_stages) if plan.caps[s])
     n_mats = 3 if activation == "swiglu" else 2
     flops = 2.0 * rows * d_model * d_ff * n_mats
-    if num_pods > 1:
-        alpha = far_l.alpha if far_l else topo_lib.DCI_ALPHA
-    else:
-        alpha = near_l.alpha if near_l else topo_lib.ICI_ALPHA
+    alpha = max((r["alpha"] for r in stages), default=0.0)
     return {"t_exchange": t_exchange, "t_compute": flops / peak_flops,
             "alpha": alpha}
 
@@ -264,16 +309,25 @@ def measure_link(mesh, axis_name: str, *,
     return est
 
 
-def measured_moe_links(mesh, *, data_axis: str = "data",
-                       pod_axis: str | None = None) -> dict:
-    """Measured near (intra-pod) / far (inter-pod) links for one EP mesh.
+def measured_ep_links(mesh, axis_names) -> dict:
+    """Measured per-axis links for one EP hierarchy: ``measure_link`` once
+    per mesh axis, keyed by axis name.
 
     Axes of size 1 (or absent) are skipped — their entry is None and
-    :func:`moe_overlap_terms` falls back to the topology constants.
+    :func:`moe_overlap_terms` falls back to the ladder constants.
     """
-    links = {"near": None, "far": None}
-    if mesh.shape.get(data_axis, 1) > 1:
-        links["near"] = measure_link(mesh, data_axis)
-    if pod_axis is not None and mesh.shape.get(pod_axis, 1) > 1:
-        links["far"] = measure_link(mesh, pod_axis)
+    links = {}
+    for ax in axis_names:
+        links[ax] = (measure_link(mesh, ax)
+                     if mesh.shape.get(ax, 1) > 1 else None)
     return links
+
+
+def measured_moe_links(mesh, *, data_axis: str = "data",
+                       pod_axis: str | None = None) -> dict:
+    """Deprecated 2-level wrapper over :func:`measured_ep_links`: measured
+    near (intra-pod) / far (inter-pod) links for one EP mesh."""
+    axes = ((pod_axis,) if pod_axis is not None else ()) + (data_axis,)
+    by_axis = measured_ep_links(mesh, axes)
+    return {"near": by_axis.get(data_axis),
+            "far": by_axis.get(pod_axis) if pod_axis is not None else None}

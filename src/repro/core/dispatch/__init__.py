@@ -40,5 +40,7 @@ from repro.core.dispatch.schedule import software_pipeline  # noqa: F401
 from repro.core.dispatch.transport import (     # noqa: F401
     A2ATransport,
     GatherTransport,
+    Stage,
+    plan_stages,
     wire_a2a,
 )

@@ -30,19 +30,70 @@ from repro.core import gating
 
 @dataclasses.dataclass(frozen=True)
 class EPSpec:
-    """How expert parallelism maps onto the mesh."""
+    """How expert parallelism maps onto the mesh.
+
+    The canonical description is ``hierarchy``: ordered
+    ``(axis_name, size)`` pairs, outermost-first, covering every mesh axis
+    the experts span (e.g. ``(("pod", 2), ("node", 2), ("data", 4))``).
+    When omitted it is derived from the legacy 2-level
+    ``num_pods``/``ep_per_pod``/``pod_axis``/``data_axis`` fields, which
+    remain the constructor surface for 2-level callers.
+    """
     num_pods: int                 # pods over which experts span (1 = no pod span)
     ep_per_pod: int               # "data"-axis size
     pod_axis: Optional[str]       # mesh axis name, None when experts don't span pods
     data_axis: str
     model_axis: Optional[str]     # tensor-parallel axis for d_ff
+    hierarchy: tuple = ()         # ((axis_name, size), ...) outermost-first
+
+    def __post_init__(self):
+        if not self.hierarchy:
+            # legacy multipod semantics: the pod tier only exists when the
+            # experts actually span pods (pod_axis set AND num_pods > 1)
+            multipod = self.pod_axis is not None and self.num_pods > 1
+            h = (((self.pod_axis, self.num_pods),) if multipod else ()) \
+                + ((self.data_axis, self.ep_per_pod),)
+            object.__setattr__(self, "hierarchy", h)
+
+    @classmethod
+    def from_axes(cls, axis_names, axis_sizes, model_axis=None) -> "EPSpec":
+        """Build an N-level spec; the legacy fields become the 2-level
+        summary (outer axes collapsed into ``num_pods``)."""
+        names = tuple(axis_names)
+        sizes = tuple(int(s) for s in axis_sizes)
+        assert len(names) == len(sizes) and names, (names, sizes)
+        outer = 1
+        for s in sizes[:-1]:
+            outer *= s
+        return cls(num_pods=outer, ep_per_pod=sizes[-1],
+                   pod_axis=names[0] if len(names) > 1 else None,
+                   data_axis=names[-1], model_axis=model_axis,
+                   hierarchy=tuple(zip(names, sizes)))
+
+    @property
+    def axis_names(self) -> tuple:
+        """EP mesh-axis names, outermost-first."""
+        return tuple(n for n, _ in self.hierarchy)
+
+    @property
+    def axis_sizes(self) -> tuple:
+        """EP mesh extents, outermost-first."""
+        return tuple(s for _, s in self.hierarchy)
+
+    @property
+    def num_stages(self) -> int:
+        """Dispatch stages = EP mesh axes (stage 0 = innermost)."""
+        return len(self.hierarchy)
 
     @property
     def ep_world(self) -> int:
-        return self.num_pods * self.ep_per_pod
+        n = 1
+        for s in self.axis_sizes:
+            n *= s
+        return n
 
     def ep_axes(self):
-        return ((self.pod_axis,) if self.pod_axis else ()) + (self.data_axis,)
+        return self.axis_names
 
 
 @dataclasses.dataclass(frozen=True)

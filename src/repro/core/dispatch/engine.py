@@ -6,7 +6,10 @@ and per-layer ``MoEArch.dispatch_override`` entries) and resolved through
 :func:`make_engine`.  Every path returns ``(y, metrics)`` with the uniform
 schema :data:`METRIC_KEYS` — missing keys are filled with neutral defaults
 by the engine so callers (shard_map out_specs, trainers, benchmarks) never
-branch on the path.
+branch on the path.  ``frac_by_level`` is a fixed-length ``[num_stages]``
+vector (one entry per dispatch stage of the EP hierarchy, stage 0 folding
+in the self level); ``frac_near`` / ``frac_far`` are derived 2-level
+aliases kept during the near/far deprecation window.
 
 Built-in paths:
 
@@ -35,14 +38,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gating
-from repro.core.capacity import CapacityPlan
+from repro.core.capacity import DispatchPlan
 from repro.core.dispatch import routing, schedule, transport
 from repro.core.dispatch.base import EPSpec, MoEConfig, expert_ffn, shared_ffn
 
-#: Uniform metrics schema every path resolves to.
-METRIC_KEYS = ("aux_loss", "frac_near", "frac_far", "dropped")
-
-_METRIC_DEFAULTS = {"frac_near": 1.0, "frac_far": 0.0, "dropped": 0.0}
+#: Uniform metrics schema every path resolves to.  ``frac_by_level`` is a
+#: ``[num_stages]`` vector; ``frac_near``/``frac_far`` are deprecated
+#: scalar aliases (``frac_by_level[0]`` and ``1 - frac_by_level[0]``).
+METRIC_KEYS = ("aux_loss", "frac_by_level", "frac_near", "frac_far",
+               "dropped")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +93,7 @@ class DispatchEngine:
     cfg: MoEConfig
     ep: EPSpec
     gate_cfg: gating.GateConfig
-    plan: Optional[CapacityPlan] = None
+    plan: Optional[DispatchPlan] = None
     num_chunks: int = 1               # a2a_pipelined schedule depth
     capacity: Optional[int] = None    # einsum buffer capacity (None = cf rule)
     tokens_replicated: bool = False   # gather: tokens already on every rank
@@ -98,24 +102,39 @@ class DispatchEngine:
     def name(self) -> str:
         return self.path.name
 
+    @property
+    def num_stages(self) -> int:
+        """Length of the ``frac_by_level`` metric vector."""
+        return self.plan.num_stages if self.plan is not None \
+            else self.ep.num_stages
+
     def __call__(self, params, x):
         y, metrics = self.path.fn(params, x, self)
-        out = {"aux_loss": metrics["aux_loss"]}
-        for k in ("frac_near", "frac_far", "dropped"):
-            v = metrics.get(k, _METRIC_DEFAULTS[k])
-            out[k] = jnp.asarray(v, jnp.float32)
+        S = self.num_stages
+        fb = metrics.get("frac_by_level")
+        if fb is None:
+            # neutral default: everything stays at the innermost stage
+            fb = jnp.zeros((S,), jnp.float32).at[0].set(1.0)
+        fb = jnp.asarray(fb, jnp.float32)
+        out = {"aux_loss": metrics["aux_loss"],
+               "frac_by_level": fb,
+               # deprecated 2-level aliases derived from the vector
+               "frac_near": fb[0],
+               "frac_far": 1.0 - fb[0],
+               "dropped": jnp.asarray(metrics.get("dropped", 0.0),
+                                      jnp.float32)}
         return y, out
 
 
 def make_engine(name: str, *, cfg: MoEConfig, ep: EPSpec,
                 gate_cfg: gating.GateConfig,
-                plan: Optional[CapacityPlan] = None, num_chunks: int = 1,
+                plan: Optional[DispatchPlan] = None, num_chunks: int = 1,
                 capacity: Optional[int] = None,
                 tokens_replicated: bool = False) -> DispatchEngine:
     """Resolve ``name`` against the registry and bind the static config."""
     path = get_path(name)
     if path.needs_plan and plan is None:
-        raise ValueError(f"dispatch {name!r} requires a CapacityPlan")
+        raise ValueError(f"dispatch {name!r} requires a DispatchPlan")
     return DispatchEngine(path=path, cfg=cfg, ep=ep, gate_cfg=gate_cfg,
                           plan=plan, num_chunks=max(1, int(num_chunks)),
                           capacity=capacity,
@@ -134,24 +153,10 @@ def dispatch_moe(name: str, params, x, *, cfg: MoEConfig, ep: EPSpec,
 # ---------------------------------------------------------------------------
 
 
-def _staged_metrics(gate_out, aux, levels, v_near, T: int, cfg: MoEConfig,
-                    gate_cfg: gating.GateConfig):
-    """Per-level dispatched token counts (for Fig 6b / Fig 7)."""
-    frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
-    lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
-    return {
-        "aux_loss": aux,
-        "frac_near": lvl1,
-        "frac_far": 1.0 - lvl1,
-        "dropped": 1.0 - jnp.minimum(
-            v_near.sum() / (T * gate_cfg.top_k), 1.0),
-    }
-
-
 def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     """The one staged implementation behind both ``a2a`` and
-    ``a2a_pipelined``: shared routing, chunk-sliced transport, and the
-    software-pipeline schedule (serialized when ``num_chunks == 1``).
+    ``a2a_pipelined``: shared routing, chunk-sliced stage-list transport,
+    and the software-pipeline schedule (serialized when ``num_chunks == 1``).
 
     Routing, capacities and combine weights are identical across chunk
     counts, so outputs are allclose at matched capacities (the per-token
@@ -159,29 +164,31 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     """
     cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
     T, d = x.shape
-    P1 = ep.ep_per_pod
     tr = transport.A2ATransport(ep=ep, wire_dtype=cfg.a2a_dtype)
+    stages = transport.plan_stages(plan, ep)
 
-    near, far, gate_out, aux, levels = routing.route(params, x, cfg, ep,
-                                                     plan, gate_cfg)
-    v_near_unpadded = near.valid
+    routed = routing.route(params, x, cfg, ep, plan, gate_cfg)
+    kept_unpadded = sum(sel.valid.sum() for _, sel in routed.sels)
     num_chunks = max(1, int(num_chunks))
     chunked = num_chunks > 1
-    near = routing.pad_selection(near, axis=2, multiple=num_chunks)
-    cn = near.buf.shape[2] // num_chunks          # per-chunk near capacity
-    cf = 0
-    if far is not None:
-        far = routing.pad_selection(far, axis=3, multiple=num_chunks)
-        cf = far.buf.shape[3] // num_chunks       # per-chunk far capacity
+
+    # per-stage state: (transport stage, padded selection, capacity axis,
+    # per-chunk capacity, expert-row count per chunk)
+    work = []
+    for (s, sel), stage in zip(routed.sels, stages):
+        cap_axis = s + 2
+        sel = routing.pad_selection(sel, axis=cap_axis, multiple=num_chunks)
+        cpc = sel.buf.shape[cap_axis] // num_chunks
+        work.append((stage, sel, cap_axis, cpc, stage.num_dests * cpc))
+
+    def chunk(a, j, cap_axis, cpc):
+        return jax.lax.slice_in_dim(a, j * cpc, (j + 1) * cpc, axis=cap_axis)
 
     def dispatch(j):
-        xin = tr.dispatch_near(
-            jax.lax.slice_in_dim(near.buf, j * cn, (j + 1) * cn, axis=2))
-        if far is not None:
-            xin_far = tr.dispatch_far(
-                jax.lax.slice_in_dim(far.buf, j * cf, (j + 1) * cf, axis=3))
-            xin = jnp.concatenate([xin, xin_far], axis=1)
-        return xin                                # [E_l, P1*cn + Q*P1*cf, d]
+        parts = [tr.dispatch(chunk(sel.buf, j, cap_axis, cpc), stage)
+                 for stage, sel, cap_axis, cpc, _ in work]
+        return parts[0] if len(parts) == 1 \
+            else jnp.concatenate(parts, axis=1)
 
     def compute(j, xin):
         return expert_ffn(params, xin, cfg, ep, chunk_granular=chunked)
@@ -189,15 +196,15 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     def combine(out, j, y_exp):
         if out is None:
             out = jnp.zeros((T, d), y_exp.dtype)
-        back = tr.combine_near(y_exp[:, : P1 * cn])
-        sl = slice(j * cn, (j + 1) * cn)
-        wgt = (near.w[:, :, sl] * near.valid[:, :, sl]).astype(y_exp.dtype)
-        out = out.at[near.idx[:, :, sl]].add(back * wgt[..., None])
-        if far is not None:
-            back_far = tr.combine_far(y_exp[:, P1 * cn:])
-            slf = slice(j * cf, (j + 1) * cf)
-            wf = (far.w[..., slf] * far.valid[..., slf]).astype(y_exp.dtype)
-            out = out.at[far.idx[..., slf]].add(back_far * wf[..., None])
+        off = 0
+        for stage, sel, cap_axis, cpc, rows in work:
+            back = tr.combine(y_exp[:, off:off + rows], stage)
+            off += rows
+            w = chunk(sel.w, j, cap_axis, cpc)
+            v = chunk(sel.valid, j, cap_axis, cpc)
+            idx = chunk(sel.idx, j, cap_axis, cpc)
+            wgt = (w * v).astype(y_exp.dtype)
+            out = out.at[idx].add(back * wgt[..., None])
         return out
 
     out = schedule.software_pipeline(num_chunks, dispatch, compute, combine,
@@ -208,8 +215,15 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
         # scheduler, issued after the pipeline drains.
         out = out + shared_ffn(params, x, cfg, ep).astype(out.dtype)
 
-    metrics = _staged_metrics(gate_out, aux, levels, v_near_unpadded, T, cfg,
-                              gate_cfg)
+    frac = gating.dispatch_fractions(routed.gate_out["topk_idx"],
+                                     cfg.num_experts)
+    metrics = {
+        "aux_loss": routed.aux,
+        "frac_by_level": gating.frac_by_level(frac, routed.levels,
+                                              plan.num_stages),
+        "dropped": 1.0 - jnp.minimum(
+            kept_unpadded / (T * gate_cfg.top_k), 1.0),
+    }
     return out.astype(x.dtype), metrics
 
 
@@ -239,18 +253,17 @@ def _gather_path(params, x, eng: DispatchEngine):
     done.  Bandwidth-optimal for single-token steps (no all-to-all).
     """
     cfg, ep, gate_cfg = eng.cfg, eng.ep, eng.gate_cfg
-    P1 = ep.ep_per_pod
     E_l = max(1, -(-cfg.num_experts // ep.ep_world))
     tr = transport.GatherTransport(ep=ep,
                                    tokens_replicated=eng.tokens_replicated)
-    my_data = jax.lax.axis_index(ep.data_axis)
-    my_pod = (jax.lax.axis_index(ep.pod_axis) if tr.multipod
-              else jnp.int32(0))
-    my_rank = my_pod * P1 + my_data
+    coords = tuple(jax.lax.axis_index(a) for a in ep.axis_names)
+    my_rank = jnp.int32(0)
+    for c, s in zip(coords, ep.axis_sizes):
+        my_rank = my_rank * s + c
 
     xg = tr.gather(x)
-    levels = gating.expert_levels(cfg.num_experts, E_l, P1, ep.num_pods,
-                                  my_pod, my_data)
+    levels = gating.expert_levels_nd(cfg.num_experts, E_l, ep.axis_sizes,
+                                     coords)
     # levels=None for the gate itself: the hir bias is rank-relative and
     # every rank gates the *gathered* tokens here, so biasing would make
     # the implied routing rank-dependent.  The aux loss below does use the
@@ -271,9 +284,9 @@ def _gather_path(params, x, eng: DispatchEngine):
         y = y + shared_ffn(params, x, cfg, ep).astype(y.dtype)
 
     frac = gating.dispatch_fractions(gate_out["topk_idx"], cfg.num_experts)
-    lvl1 = jnp.sum(jnp.where(levels <= 1, frac, 0.0))
     metrics = {"aux_loss": aux,
-               "frac_near": lvl1, "frac_far": 1.0 - lvl1,
+               "frac_by_level": gating.frac_by_level(frac, levels,
+                                                     eng.num_stages),
                "dropped": 0.0}   # no capacity limit: nothing ever drops
     return y.astype(x.dtype), metrics
 

@@ -12,17 +12,22 @@ Selections are ``Selection(w, idx, valid, buf)`` named tuples:
     idx    [..., cap]      source-token index of each slot
     valid  [..., cap]      1.0 where the slot holds a real token
     buf    [..., cap, d]   the gathered (and masked) token payload
+
+Stage ``s``'s selection has ``s + 1`` leading destination dims (the
+innermost ``s + 1`` EP mesh axes, outermost first), so its capacity axis is
+``s + 2`` and its payload feeds the matching transport
+:class:`~repro.core.dispatch.transport.Stage` directly.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import gating
-from repro.core.capacity import CapacityPlan
+from repro.core.capacity import DispatchPlan
 from repro.core.dispatch.base import EPSpec, MoEConfig
 
 
@@ -35,12 +40,28 @@ class Selection(NamedTuple):
 
 
 class Routing(NamedTuple):
-    """Output of :func:`route` — shared by all staged paths."""
-    near: Selection                # capacity axis 2: [P1, E_l, C, ...]
-    far: Optional[Selection]       # capacity axis 3: [Q, P1, E_l, C, ...]
+    """Output of :func:`route` — shared by all staged paths.
+
+    ``sels[i]`` is ``(stage_index, Selection)`` for each *active* plan
+    stage, in stage order.  ``near`` / ``far`` are deprecated 2-level views.
+    """
+    sels: tuple
     gate_out: dict
     aux: jnp.ndarray
     levels: jnp.ndarray
+
+    @property
+    def near(self):
+        """Deprecated: the stage-0 selection."""
+        return self.sels[0][1] if self.sels and self.sels[0][0] == 0 else None
+
+    @property
+    def far(self):
+        """Deprecated: the stage-1 selection (None on single-stage plans)."""
+        for s, sel in self.sels:
+            if s == 1:
+                return sel
+        return None
 
 
 def score_matrix(gate_out, num_experts: int):
@@ -61,45 +82,72 @@ def select(score_rows, x, cap: int) -> Selection:
     return Selection(w, idx, valid, buf)
 
 
-def route(params, x, cfg: MoEConfig, ep: EPSpec, plan: CapacityPlan,
+def _prod(xs) -> int:
+    out = 1
+    for v in xs:
+        out *= int(v)
+    return out
+
+
+def _rank_offsets(inner_sizes) -> jnp.ndarray:
+    """Mixed-radix rank offsets of shape ``inner_sizes`` (outermost-major)."""
+    offs = jnp.zeros(tuple(inner_sizes), jnp.int32)
+    stride = 1
+    for j in range(len(inner_sizes) - 1, -1, -1):
+        shape = [1] * len(inner_sizes)
+        shape[j] = inner_sizes[j]
+        offs = offs + jnp.arange(inner_sizes[j]).reshape(shape) * stride
+        stride *= inner_sizes[j]
+    return offs
+
+
+def route(params, x, cfg: MoEConfig, ep: EPSpec, plan: DispatchPlan,
           gate_cfg: gating.GateConfig) -> Routing:
     """Gating + per-level token selection for the staged (a2a) paths.
 
-    ``near`` targets the experts of this rank's own pod (delivered over the
-    data axis at capacity ``plan.cap_near``); ``far`` targets other pods
-    (two-stage delivery at ``plan.cap_far``; None on single-pod meshes).
+    Stage ``s`` targets the experts of ranks sharing this rank's outer
+    coordinates on all axes above the innermost ``s + 1`` (delivered by the
+    matching transport stage at capacity ``plan.caps[s]``).  Destinations
+    already reachable at a lower stage are masked to -1 — except at stage 0,
+    whose buffer also carries the folded-in self traffic.
     """
-    P1 = ep.ep_per_pod
+    sizes = ep.axis_sizes
+    n = len(sizes)
+    assert plan.num_stages == n, (
+        f"plan has {plan.num_stages} stages but the EP spec spans {n} mesh "
+        f"axes {ep.axis_names}; rebuild the plan for this mesh")
     E_l = plan.experts_per_rank
-    n_pods = ep.num_pods
-    multipod = ep.pod_axis is not None and n_pods > 1
+    coords = tuple(jax.lax.axis_index(a) for a in ep.axis_names)
+    my_rank = jnp.int32(0)
+    for c, s in zip(coords, sizes):
+        my_rank = my_rank * s + c
 
-    my_data = jax.lax.axis_index(ep.data_axis)
-    my_pod = jax.lax.axis_index(ep.pod_axis) if multipod else jnp.int32(0)
-
-    levels = gating.expert_levels(cfg.num_experts, E_l, P1,
-                                  n_pods, my_pod, my_data)
+    levels = gating.expert_levels_nd(cfg.num_experts, E_l, sizes, coords)
     gate_out = gating.gate_forward(params["gate"], x, gate_cfg, levels)
     aux = gating.aux_loss(gate_out, gate_cfg, levels)
 
     score = score_matrix(gate_out, cfg.num_experts)  # [N, T]
 
-    # near: experts of my own pod, delivered over the data axis
-    near_rank = my_pod * P1 + jnp.arange(P1)                       # [P1]
-    near_eids = near_rank[:, None] * E_l + jnp.arange(E_l)         # [P1, E_l]
-    s_near = jnp.take(score, near_eids, axis=0)                    # [P1, E_l, T]
-    near = select(s_near, x, plan.cap_near)
-
-    far = None
-    if multipod and plan.cap_far > 0:
-        all_rank = (jnp.arange(n_pods)[:, None] * P1
-                    + jnp.arange(P1)[None, :])                      # [Q, P1]
-        far_eids = all_rank[..., None] * E_l + jnp.arange(E_l)      # [Q, P1, E_l]
-        s_far = jnp.take(score, far_eids, axis=0)                   # [Q, P1, E_l, T]
-        own = (jnp.arange(n_pods) == my_pod)[:, None, None, None]
-        s_far = jnp.where(own, -1.0, s_far)  # own pod handled by near stage
-        far = select(s_far, x, plan.cap_far)
-    return Routing(near, far, gate_out, aux, levels)
+    sels = []
+    for s in range(plan.num_stages):
+        cap = plan.caps[s]
+        if cap <= 0:
+            continue
+        k = n - s - 1                      # outermost free axis position
+        inner = sizes[k:]
+        block = _prod(inner)
+        base = (my_rank // block) * block  # my rank with inner coords zeroed
+        ranks = base + _rank_offsets(inner)                 # [*inner]
+        eids = ranks[..., None] * E_l + jnp.arange(E_l)     # [*inner, E_l]
+        sc = jnp.take(score, eids, axis=0)                  # [*inner, E_l, T]
+        if s > 0:
+            # destinations sharing my axis-k coordinate are served by a
+            # lower stage; stage 0 keeps them (self traffic folds in)
+            own = (jnp.arange(sizes[k]) == coords[k]).reshape(
+                (sizes[k],) + (1,) * (len(inner) + 1))
+            sc = jnp.where(own, -1.0, sc)
+        sels.append((s, select(sc, x, cap)))
+    return Routing(tuple(sels), gate_out, aux, levels)
 
 
 def pad_selection(sel: Selection, axis: int, multiple: int) -> Selection:

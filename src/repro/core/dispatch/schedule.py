@@ -4,8 +4,13 @@ The only schedule today is the 3-stage software pipeline.  The sync a2a
 path is *literally* :func:`software_pipeline` with ``num_chunks == 1`` —
 one dispatch, one compute, one combine, fully serialized — so the engine
 has a single staged implementation and the schedules differ only in chunk
-count.  Later async features (shadowed experts, quantized-a2a overlap,
-decode batching) reuse the skeleton by swapping the stage callables.
+count.  The dispatch/compute/combine callables the engine hands in are
+built by iterating the plan's level-indexed stage list
+(``transport.plan_stages``), so the skeleton is agnostic to how many
+topology levels the mesh has — 2-level near/far and N-level hierarchies
+run the identical pipeline.  Later async features (shadowed experts,
+quantized-a2a overlap, decode batching) reuse the skeleton by swapping
+the stage callables.
 """
 
 from __future__ import annotations

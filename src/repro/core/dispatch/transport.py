@@ -3,12 +3,15 @@
 A transport object owns *how bytes move between EP ranks* — nothing about
 routing or scheduling.  Two families exist:
 
-* :class:`A2ATransport` — equal-split staged ``lax.all_to_all``: one
-  intra-pod stage over the data axis (``cap_near`` slots) and, on multipod
-  meshes, a two-hop inter-pod delivery (pod axis then data axis,
-  ``cap_far`` slots).  The wire-dtype cast (e.g. fp8 payload quantization)
-  lives here, immediately around each collective, so only wire bytes are
-  low-precision while compute stays in the model dtype.
+* :class:`A2ATransport` — equal-split staged ``lax.all_to_all`` driven by a
+  list of :class:`Stage` objects derived from the level-indexed
+  :class:`~repro.core.capacity.DispatchPlan`.  Stage ``s`` delivers over
+  the innermost ``s + 1`` EP mesh axes as a chain of all_to_alls
+  (outermost hop first), so a 2-axis mesh reproduces the PR-2 near/far
+  pair and an N-axis mesh gets N stages with no new code.  The wire-dtype
+  cast (e.g. fp8 payload quantization) lives here, immediately around each
+  collective, so only wire bytes are low-precision while compute stays in
+  the model dtype.
 * :class:`GatherTransport` — the weights-stationary decode regime: tokens
   are (all-)gathered to every EP rank and partial expert outputs are
   psum-combined; no all-to-all at all.
@@ -46,49 +49,103 @@ def wire_a2a(x, axis_name, *, split_axis, concat_axis, wire_dtype: str = ""):
 
 
 @dataclasses.dataclass(frozen=True)
+class Stage:
+    """One level-indexed exchange stage of a dispatch plan.
+
+    ``axis_names``/``axis_sizes`` are the delivery chain, outermost hop
+    first: stage ``index`` traverses the innermost ``index + 1`` EP mesh
+    axes.  ``cap`` is the per-(source device, expert) token capacity the
+    routing stage selects for this level.
+    """
+
+    index: int                    # dispatch stage (0 = innermost / "near")
+    axis_names: tuple             # delivery chain, outermost hop first
+    axis_sizes: tuple
+    cap: int
+
+    @property
+    def num_dests(self) -> int:
+        """Destination ranks addressed by this stage's buffer (incl. the
+        lower-stage block that routing masks out)."""
+        n = 1
+        for s in self.axis_sizes:
+            n *= s
+        return n
+
+
+def plan_stages(plan, ep: EPSpec) -> tuple:
+    """Active :class:`Stage` list for one plan on one EP spec.
+
+    The plan's ``level_axes`` name the canonical hierarchy; the EP spec is
+    authoritative for the mesh axis names actually bound inside shard_map,
+    so stages are rebuilt from ``ep.hierarchy`` and validated against the
+    plan's stage count.
+    """
+    names, sizes = ep.axis_names, ep.axis_sizes
+    n = len(names)
+    assert plan.num_stages == n, (
+        f"plan has {plan.num_stages} stages but the EP spec spans {n} mesh "
+        f"axes {names}; rebuild the plan for this mesh")
+    return tuple(Stage(index=s, axis_names=names[n - s - 1:],
+                       axis_sizes=sizes[n - s - 1:], cap=plan.caps[s])
+                 for s in range(n) if plan.caps[s] > 0)
+
+
+@dataclasses.dataclass(frozen=True)
 class A2ATransport:
     """Equal-split staged all-to-all over the EP mesh axes."""
 
     ep: EPSpec
     wire_dtype: str = ""
 
+    def dispatch(self, buf, stage: Stage):
+        """[*sizes, E_l, C, d] local buffer -> [E_l, prod(sizes)*C, d]
+        expert rows, via a chain of all_to_alls (outermost hop first)."""
+        k = len(stage.axis_names)
+        for i, ax in enumerate(stage.axis_names):
+            buf = wire_a2a(buf, ax, split_axis=i, concat_axis=i,
+                           wire_dtype=self.wire_dtype)
+        E_l, C, d = buf.shape[k:]
+        perm = (k,) + tuple(range(k)) + (k + 1, k + 2)
+        return buf.transpose(perm).reshape(E_l, stage.num_dests * C, d)
+
+    def combine(self, y, stage: Stage):
+        """[E_l, prod(sizes)*C, d] expert outputs -> [*sizes, E_l, C, d]
+        back at the source (reverse chain, innermost hop first)."""
+        sizes = stage.axis_sizes
+        k = len(sizes)
+        E_l, R, d = y.shape
+        y = y.reshape((E_l,) + sizes + (R // stage.num_dests, d))
+        perm = tuple(range(1, k + 1)) + (0, k + 1, k + 2)
+        y = y.transpose(perm)                     # [*sizes, E_l, C, d]
+        for i in range(k - 1, -1, -1):
+            y = wire_a2a(y, stage.axis_names[i], split_axis=i, concat_axis=i,
+                         wire_dtype=self.wire_dtype)
+        return y
+
+    # --- deprecated near/far wrappers (PR-2 compat) ------------------------
+
+    def _stage2(self, index: int) -> Stage:
+        names, sizes = self.ep.axis_names, self.ep.axis_sizes
+        n = len(names)
+        return Stage(index=index, axis_names=names[n - index - 1:],
+                     axis_sizes=sizes[n - index - 1:], cap=0)
+
     def dispatch_near(self, buf):
-        """[P1, E_l, C, d] local buffer -> [E_l, P1*C, d] expert rows."""
-        P1, E_l, C, d = buf.shape
-        recv = wire_a2a(buf, self.ep.data_axis, split_axis=0, concat_axis=0,
-                        wire_dtype=self.wire_dtype)
-        return recv.transpose(1, 0, 2, 3).reshape(E_l, P1 * C, d)
+        """Deprecated: ``dispatch(buf, stage 0)``."""
+        return self.dispatch(buf, self._stage2(0))
 
     def dispatch_far(self, buf):
-        """[Q, P1, E_l, C, d] local buffer -> [E_l, Q*P1*C, d] expert rows."""
-        Q, P1, E_l, C, d = buf.shape
-        # pod exchange: slice [q] -> pod q (carries tokens for (q, *) ranks)
-        t = wire_a2a(buf, self.ep.pod_axis, split_axis=0, concat_axis=0,
-                     wire_dtype=self.wire_dtype)
-        # deliver within pod: axis 1 is the destination data index
-        t = wire_a2a(t, self.ep.data_axis, split_axis=1, concat_axis=1,
-                     wire_dtype=self.wire_dtype)
-        # t[q, s]: tokens from rank (q, s) for my experts
-        return t.transpose(2, 0, 1, 3, 4).reshape(E_l, Q * P1 * C, d)
+        """Deprecated: ``dispatch(buf, stage 1)``."""
+        return self.dispatch(buf, self._stage2(1))
 
     def combine_near(self, y):
-        """[E_l, P1*C, d] expert outputs -> [P1, E_l, C, d] at the source."""
-        P1 = self.ep.ep_per_pod
-        E_l, R, d = y.shape
-        y = y.reshape(E_l, P1, R // P1, d).transpose(1, 0, 2, 3)
-        return wire_a2a(y, self.ep.data_axis, split_axis=0, concat_axis=0,
-                        wire_dtype=self.wire_dtype)
+        """Deprecated: ``combine(y, stage 0)``."""
+        return self.combine(y, self._stage2(0))
 
     def combine_far(self, y):
-        """[E_l, Q*P1*C, d] expert outputs -> [Q, P1, E_l, C, d] at source."""
-        n_pods, P1 = self.ep.num_pods, self.ep.ep_per_pod
-        E_l, R, d = y.shape
-        y = y.reshape(E_l, n_pods, P1, R // (n_pods * P1), d)
-        y = y.transpose(1, 2, 0, 3, 4)                   # [Q, P1, E_l, C, d]
-        y = wire_a2a(y, self.ep.data_axis, split_axis=1, concat_axis=1,
-                     wire_dtype=self.wire_dtype)
-        return wire_a2a(y, self.ep.pod_axis, split_axis=0, concat_axis=0,
-                        wire_dtype=self.wire_dtype)
+        """Deprecated: ``combine(y, stage 1)``."""
+        return self.combine(y, self._stage2(1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,24 +155,21 @@ class GatherTransport:
     ep: EPSpec
     tokens_replicated: bool = False   # tokens already on every EP rank
 
-    @property
-    def multipod(self) -> bool:
-        return self.ep.pod_axis is not None and self.ep.num_pods > 1
-
     def gather(self, x):
-        """[T_local, d] -> [T_global, d] on every EP rank."""
+        """[T_local, d] -> [T_global, d] on every EP rank.
+
+        Gathers innermost axis first so the global order is outermost-major
+        rank order — matching the mixed-radix ``my_rank`` numbering."""
         if self.tokens_replicated:
             return x
-        xg = jax.lax.all_gather(x, self.ep.data_axis, axis=0, tiled=True)
-        if self.multipod:
-            xg = jax.lax.all_gather(xg, self.ep.pod_axis, axis=0, tiled=True)
-        return xg
+        for ax in reversed(self.ep.axis_names):
+            x = jax.lax.all_gather(x, ax, axis=0, tiled=True)
+        return x
 
     def reduce(self, y):
         """Sum each rank's partial expert outputs across the EP axes."""
-        y = jax.lax.psum(y, self.ep.data_axis)
-        if self.multipod:
-            y = jax.lax.psum(y, self.ep.pod_axis)
+        for ax in self.ep.axis_names:
+            y = jax.lax.psum(y, ax)
         return y
 
     def slice_local(self, y, my_rank, T: int):

@@ -36,20 +36,41 @@ def init_gate_params(key, d_model: int, cfg: GateConfig):
                                    dtype=jnp.float32) * scale}
 
 
-def expert_levels(num_experts: int, experts_per_rank: int, ep_per_pod: int,
-                  num_pods: int, my_pod, my_data) -> jnp.ndarray:
-    """Topology level of each global expert relative to this rank.
+def expert_levels_nd(num_experts: int, experts_per_rank: int,
+                     axis_sizes, my_coords) -> jnp.ndarray:
+    """Topology level of each global expert relative to this rank (N-level).
 
-    Returns int array [N]: 0 = my own experts, 1 = same pod, 2 = other pod.
-    Expert e lives on EP rank e // experts_per_rank with rank order
-    (pod-major): rank = pod * ep_per_pod + data.
+    ``axis_sizes`` are the EP mesh extents outermost-first and
+    ``my_coords`` this rank's matching coordinates.  Expert ``e`` lives on
+    EP rank ``e // experts_per_rank`` with outermost-major rank order.
+    Returns int array [N]: 0 = my own experts, ``n_axes - i`` when the
+    owning rank first differs from mine at axis ``i`` — i.e. 1 = innermost
+    neighbours, ``n_axes`` = across the root switch.
     """
+    sizes = tuple(int(s) for s in axis_sizes)
+    n = len(sizes)
     e = jnp.arange(num_experts)
     rank = e // experts_per_rank
-    pod = rank // ep_per_pod
-    my_rank = my_pod * ep_per_pod + my_data
-    lvl = jnp.where(rank == my_rank, 0, jnp.where(pod == my_pod, 1, 2))
+    lvl = jnp.zeros_like(rank)
+    stride = 1
+    for i in range(n - 1, -1, -1):
+        c = (rank // stride) % sizes[i]
+        lvl = jnp.maximum(lvl, jnp.where(c != my_coords[i], n - i, 0))
+        stride *= sizes[i]
     return lvl
+
+
+def expert_levels(num_experts: int, experts_per_rank: int, ep_per_pod: int,
+                  num_pods: int, my_pod, my_data) -> jnp.ndarray:
+    """Deprecated 2-level wrapper over :func:`expert_levels_nd`.
+
+    Returns int array [N]: 0 = my own experts, 1 = same pod, 2 = other pod.
+    """
+    if num_pods > 1:
+        return expert_levels_nd(num_experts, experts_per_rank,
+                                (num_pods, ep_per_pod), (my_pod, my_data))
+    return expert_levels_nd(num_experts, experts_per_rank,
+                            (ep_per_pod,), (my_data,))
 
 
 def gate_forward(params, x, cfg: GateConfig, levels: Optional[jnp.ndarray]):
@@ -81,6 +102,19 @@ def dispatch_fractions(topk_idx, num_experts: int) -> jnp.ndarray:
     counts = one_hot.sum(axis=(0, 1))  # [N]
     total = topk_idx.shape[0] * topk_idx.shape[1]
     return counts / total
+
+
+def frac_by_level(frac, levels, num_stages: int) -> jnp.ndarray:
+    """Aggregate per-expert dispatch fractions into per-stage fractions.
+
+    Stage ``s`` serves topology level ``s + 1``; level 0 (self) is folded
+    into stage 0, matching the capacity-plan convention.  Returns a fixed
+    ``[num_stages]`` vector summing to 1 — the uniform ``frac_by_level``
+    metric of the dispatch engine.
+    """
+    stage = jnp.clip(levels - 1, 0, num_stages - 1)
+    onehot = jax.nn.one_hot(stage, num_stages, dtype=jnp.float32)   # [N, S]
+    return jnp.einsum("ns,n->s", onehot, frac.astype(jnp.float32))
 
 
 def aux_loss(gate_out, cfg: GateConfig,

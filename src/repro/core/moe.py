@@ -8,13 +8,17 @@ schedule / engine).  This module keeps the old import surface working —
 through the :class:`~repro.core.dispatch.DispatchEngine` registry.
 
 New code should import from ``repro.core.dispatch`` directly (or go through
-``models/transformer._moe_block``, which already does).  Note one schema
-change the wrappers inherit: every path now returns the uniform metrics
-dict ``("aux_loss", "frac_near", "frac_far", "dropped")``.
+``models/transformer._moe_block``, which already does); each ``moe_apply_*``
+wrapper emits a ``DeprecationWarning`` on use.  Note one schema change the
+wrappers inherit: every path now returns the uniform metrics dict
+``("aux_loss", "frac_by_level", "frac_near", "frac_far", "dropped")`` —
+``frac_by_level`` is the level-indexed vector, ``frac_near``/``frac_far``
+its deprecated 2-level aliases.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from repro.core import dispatch as _dispatch
@@ -37,8 +41,16 @@ from repro.core.dispatch.routing import (  # noqa: F401  (legacy private names)
 from repro.core.dispatch.transport import wire_a2a as _a2a  # noqa: F401
 
 
+def _deprecated(wrapper: str, path: str):
+    warnings.warn(
+        f"repro.core.moe.{wrapper} is deprecated; use "
+        f"repro.core.dispatch.dispatch_moe({path!r}, ...) or make_engine "
+        f"instead", DeprecationWarning, stacklevel=3)
+
+
 def moe_apply_a2a(params, x, cfg, ep, plan, gate_cfg):
     """x: [T_local, d] inside shard_map. Returns (y, metrics)."""
+    _deprecated("moe_apply_a2a", "a2a")
     return _dispatch.dispatch_moe("a2a", params, x, cfg=cfg, ep=ep,
                                   gate_cfg=gate_cfg, plan=plan)
 
@@ -46,6 +58,7 @@ def moe_apply_a2a(params, x, cfg, ep, plan, gate_cfg):
 def moe_apply_a2a_pipelined(params, x, cfg, ep, plan, gate_cfg,
                             num_chunks: int = 2):
     """Chunked, software-pipelined variant of :func:`moe_apply_a2a`."""
+    _deprecated("moe_apply_a2a_pipelined", "a2a_pipelined")
     return _dispatch.dispatch_moe("a2a_pipelined", params, x, cfg=cfg, ep=ep,
                                   gate_cfg=gate_cfg, plan=plan,
                                   num_chunks=num_chunks)
@@ -54,6 +67,7 @@ def moe_apply_a2a_pipelined(params, x, cfg, ep, plan, gate_cfg,
 def moe_apply_gather(params, x, cfg, ep, gate_cfg,
                      tokens_replicated: bool = False):
     """Decode-time MoE: weights stationary, tokens gathered."""
+    _deprecated("moe_apply_gather", "gather")
     return _dispatch.dispatch_moe("gather", params, x, cfg=cfg, ep=ep,
                                   gate_cfg=gate_cfg,
                                   tokens_replicated=tokens_replicated)
@@ -62,5 +76,6 @@ def moe_apply_gather(params, x, cfg, ep, gate_cfg,
 def moe_apply_einsum(params, x, cfg, ep, gate_cfg,
                      capacity: Optional[int] = None):
     """GShard/DeepSpeed einsum baseline (paper §2)."""
+    _deprecated("moe_apply_einsum", "einsum")
     return _dispatch.dispatch_moe("einsum", params, x, cfg=cfg, ep=ep,
                                   gate_cfg=gate_cfg, capacity=capacity)

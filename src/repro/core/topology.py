@@ -339,9 +339,11 @@ def penalty_weights(c_hat_row: np.ndarray, norm: str = "sum") -> np.ndarray:
 # assumption, stated in EXPERIMENTS.md.
 ICI_BW = 50e9          # bytes/s per link, intra-pod
 DCI_BW = 6.25e9        # bytes/s, inter-pod data-center interconnect
+NODE_BW = 12.5e9       # bytes/s, intra-pod inter-node DCN (3-tier meshes)
 LOCAL_BW = 819e9       # HBM-speed "self" transfers
 ICI_ALPHA = 1e-6       # s
 DCI_ALPHA = 10e-6      # s
+NODE_ALPHA = 5e-6      # s, intra-pod DCN hop
 
 
 def tpu_topology(num_pods: int, devices_per_pod: int) -> CommModel:
@@ -363,3 +365,71 @@ def tpu_topology(num_pods: int, devices_per_pod: int) -> CommModel:
     return CommModel(topo=topo,
                      alpha=(0.0, ICI_ALPHA, DCI_ALPHA),
                      beta=(1.0 / ICI_BW, 1.0 / ICI_BW, 1.0 / DCI_BW))
+
+
+def nested_spec(axis_sizes: Sequence):
+    """Symmetric TreeTopology spec for an N-axis mesh hierarchy.
+
+    ``axis_sizes`` are outermost-first, e.g. ``(2, 2, 2)`` (pod x node x
+    data) gives the paper-notation spec ``((2, 2), (2, 2))`` — the nested
+    [[2, 2], [2, 2]] of Fig. 2.  A single axis yields the flat int spec.
+    """
+    sizes = tuple(int(s) for s in axis_sizes)
+    if not sizes:
+        raise ValueError("axis_sizes must be non-empty")
+    spec = sizes[-1]
+    for s in reversed(sizes[:-1]):
+        spec = (spec,) * s
+    return spec
+
+
+def axis_sizes_from_spec(spec) -> tuple:
+    """Per-axis sizes (outermost-first) of a *symmetric* nested spec.
+
+    Inverse of :func:`nested_spec`: ``[[2, 2], [2, 2]] -> (2, 2, 2)``.
+    Asymmetric specs are merged first (paper §4.2) so every spec yields a
+    concrete mesh hierarchy.
+    """
+    def _tup(s):
+        return s if isinstance(s, int) else tuple(_tup(c) for c in s)
+
+    topo = TreeTopology(_tup(spec))
+    if not topo.is_symmetric():
+        topo = symmetrize(topo)
+    sizes = []
+    node = topo.spec
+    while not isinstance(node, int):
+        sizes.append(len(node))
+        node = node[0]
+    sizes.append(node)
+    return tuple(sizes)
+
+
+def tree_topology_nd(axis_sizes: Sequence, *, alpha=None,
+                     beta=None) -> CommModel:
+    """alpha-beta CommModel for an N-axis hierarchical mesh.
+
+    ``axis_sizes`` are outermost-first (``(pods, nodes, data)``).  For one
+    or two axes this is exactly :func:`tpu_topology` (byte-identical plans
+    for existing 2-level configs); deeper hierarchies get the default
+    bandwidth ladder innermost ICI -> intermediate DCN (``NODE_BW``) ->
+    outermost DCI, with the self level folded into the innermost link as
+    always (Eq. 5 smoothing rationale; see :func:`tpu_topology`).
+    Explicit per-level ``alpha``/``beta`` tuples (length ``n_axes + 1``,
+    level 0 = self) override the ladder.
+    """
+    sizes = tuple(int(s) for s in axis_sizes)
+    n = len(sizes)
+    if alpha is None and beta is None and n <= 2:
+        if n == 1:
+            return tpu_topology(1, sizes[0])
+        return tpu_topology(sizes[0], sizes[1])
+    topo = TreeTopology(nested_spec(sizes))
+    if beta is None:
+        # level 1 = innermost (ICI, with self folded in), top level = DCI,
+        # everything between = intra-pod DCN
+        beta = (1.0 / ICI_BW, 1.0 / ICI_BW) \
+            + (1.0 / NODE_BW,) * (n - 2) + (1.0 / DCI_BW,)
+    if alpha is None:
+        alpha = (0.0, ICI_ALPHA) + (NODE_ALPHA,) * (n - 2) + (DCI_ALPHA,)
+    return CommModel(topo=topo, alpha=tuple(alpha), beta=tuple(beta))

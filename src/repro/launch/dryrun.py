@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro import sharding
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_production_mesh_3tier
 from repro.models import model as model_lib
 from repro.models import transformer
 from repro.optim import adamw
@@ -56,22 +56,33 @@ def skip_reason(arch, shape_name: str):
     return None
 
 
-def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
+def lower_one(arch_id: str, shape_name: str, multi_pod,
               aux_mode: str = "ta", use_remat: bool | None = None,
               optimized: bool = False, ctx_overrides: dict | None = None,
               tag: str = ""):
-    """Returns (record, compiled) — record holds all analysis numbers."""
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    """Returns (record, compiled) — record holds all analysis numbers.
+
+    ``multi_pod``: False = pod1 (16x16), True = pod2 (2x16x16), or the
+    string ``"pod3"`` for the 3-tier 2x2x8x16 pod/node/data/model mesh.
+    """
+    if multi_pod == "pod3":
+        mesh, mesh_name = make_production_mesh_3tier(), "pod3"
+    else:
+        mesh = make_production_mesh(multi_pod=bool(multi_pod))
+        mesh_name = "pod2" if multi_pod else "pod1"
     arch0 = get_config(arch_id)
     arch, note = arch_variant(arch0, shape_name)
     if arch is None:
         return {"arch": arch_id, "shape": shape_name,
-                "mesh": "pod2" if multi_pod else "pod1",
+                "mesh": mesh_name,
                 "status": "skipped", "note": note}, None
     sh = INPUT_SHAPES[shape_name]
     kind = sh["kind"]
     B, S = sh["global_batch"], sh["seq_len"]
-    replicated = B < (mesh.shape.get("pod", 1) * mesh.shape["data"])
+    nshard = 1
+    for a in sharding.hierarchy_axes(mesh):
+        nshard *= mesh.shape[a]
+    replicated = B < nshard
     remat = kind == "train" if use_remat is None else use_remat
 
     ctx = model_lib.build_ctx(arch, mesh, seq_len=S, global_batch=B,
@@ -155,10 +166,14 @@ def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
                                hlo_text=hlo)
     rec = {
         "arch": arch_id, "shape": shape_name,
-        "mesh": "pod2" if multi_pod else "pod1",
+        "mesh": mesh_name,
         "status": "ok", "note": note, "kind": kind,
         "aux_mode": aux_mode, "optimized": optimized, "tag": tag,
         "dispatch": ctx.dispatch, "a2a_num_chunks": ctx.a2a_num_chunks,
+        "dispatch_levels": (ctx.plan.num_stages
+                            if getattr(ctx, "plan", None) is not None else 0),
+        "caps_by_level": (list(ctx.plan.caps)
+                          if getattr(ctx, "plan", None) is not None else []),
         "ctx_overrides": {k: str(v) for k, v in (ctx_overrides or {}).items()},
         "n_params": n_params, "active_params": active,
         "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
@@ -198,7 +213,8 @@ def main(argv=None):
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None,
                     choices=list(INPUT_SHAPES) + [None])
-    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--mesh", default="pod1",
+                    choices=["pod1", "pod2", "pod3", "both", "all"])
     ap.add_argument("--aux-mode", default="ta", choices=["ta", "lb", "hir"])
     ap.add_argument("--opt", action="store_true",
                     help="beyond-paper perf flags (blockwise attn, fused "
@@ -210,14 +226,17 @@ def main(argv=None):
     archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
         else [args.shape]
-    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+    meshes = {"pod1": [False], "pod2": [True], "pod3": ["pod3"],
+              "both": [False, True],
+              "all": [False, True, "pod3"]}[args.mesh]
 
     failures = 0
     for arch_id in archs:
         for shape_name in shapes:
             for multi in meshes:
-                tag = (f"{arch_id} x {shape_name} x "
-                       f"{'pod2' if multi else 'pod1'}")
+                mesh_name = multi if isinstance(multi, str) else (
+                    "pod2" if multi else "pod1")
+                tag = f"{arch_id} x {shape_name} x {mesh_name}"
                 try:
                     rec, compiled = lower_one(arch_id, shape_name, multi,
                                               aux_mode=args.aux_mode,
@@ -237,7 +256,7 @@ def main(argv=None):
                 except Exception as e:
                     failures += 1
                     rec = {"arch": arch_id, "shape": shape_name,
-                           "mesh": "pod2" if multi else "pod1",
+                           "mesh": mesh_name,
                            "status": "fail", "error": f"{type(e).__name__}: {e}"}
                     print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
                     traceback.print_exc(limit=4)

@@ -5,12 +5,17 @@ never touches JAX device state — critical because the dry-run must set
 XLA_FLAGS before the first device query.
 
 All meshes go through :func:`repro.compat.make_mesh`, which papers over the
-``axis_types`` kwarg that only exists on jax >= 0.5.
+``axis_types`` kwarg that only exists on jax >= 0.5.  Hierarchies deeper
+than pod x data use the canonical ``pod / node* / data`` axis naming (see
+``repro.core.capacity.default_axis_names``) so the level-indexed dispatch
+plans line up with the mesh axes.
 """
 
 from __future__ import annotations
 
 from repro.compat import make_mesh
+from repro.core import topology as topo_lib
+from repro.core.capacity import default_axis_names
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,9 +25,40 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, pods: int = 0):
+def make_production_mesh_3tier():
+    """2 pods x 2 nodes x 8 data x 16 model (512 chips): the 3-tier
+    NVLink/ICI -> intra-pod DCN -> inter-pod regime."""
+    return make_mesh((2, 2, 8, 16), ("pod", "node", "data", "model"))
+
+
+def make_hierarchical_mesh(axis_sizes, model: int = 1):
+    """N-tier mesh from outermost-first hierarchy sizes plus a model axis.
+
+    ``axis_sizes=(2, 2, 2), model=1`` gives a 2x2x2x1 mesh with axes
+    ``("pod", "node", "data", "model")``.
+    """
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = default_axis_names(len(sizes))
+    return make_mesh(sizes + (model,), names + ("model",))
+
+
+def mesh_from_topology(spec, model: int = 1):
+    """Mesh for a paper-notation nested topology spec (Fig. 2).
+
+    ``[[2, 2], [2, 2]]`` -> a ("pod", "node", "data", "model") 2x2x2xmodel
+    mesh.  Asymmetric specs are merged first (paper §4.2).
+    """
+    return make_hierarchical_mesh(topo_lib.axis_sizes_from_spec(spec),
+                                  model=model)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pods: int = 0,
+                   nodes: int = 0):
     """Small mesh over however many (possibly forced-host) devices exist."""
-    if pods:
+    if nodes:
+        shape = (max(pods, 1), nodes, data, model)
+        axes = ("pod", "node", "data", "model")
+    elif pods:
         shape, axes = (pods, data, model), ("pod", "data", "model")
     else:
         shape, axes = (data, model), ("data", "model")

@@ -12,13 +12,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding
 from repro.configs.base import ArchConfig, INPUT_SHAPES
-from repro.core import capacity, gating, moe as moe_lib, topology
+from repro.core import capacity, gating, topology
+from repro.core.dispatch import base as moe_base
 from repro.models import transformer, decode as decode_lib
 
 
 def default_rules(mesh) -> sharding.AxisRules:
     names = mesh.axis_names
-    batch = tuple(a for a in ("pod", "data") if a in names)
+    batch = sharding.hierarchy_axes(mesh)
     return sharding.AxisRules({
         "batch": batch if len(batch) > 1 else (batch[0] if batch else None),
         "model": "model" if "model" in names else None,
@@ -27,46 +28,58 @@ def default_rules(mesh) -> sharding.AxisRules:
     }, mesh=mesh)
 
 
-def make_ep_spec(arch: ArchConfig, mesh) -> Optional[moe_lib.EPSpec]:
+def make_ep_spec(arch: ArchConfig, mesh) -> Optional[moe_base.EPSpec]:
+    """EP hierarchy for one mesh: experts span the longest *suffix* of the
+    non-model axes (innermost outward) whose extent divides the expert
+    count — the whole hierarchy when possible, fewer tiers otherwise (the
+    unspanned outer axes stay pure data parallelism).  The dispatch plan's
+    level count follows this span."""
     if not arch.is_moe:
         return None
-    pods = mesh.shape.get("pod", 1)
-    data = mesh.shape.get("data", 1)
+    axes = sharding.hierarchy_axes(mesh)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    while len(sizes) > 1 and sizes[0] == 1:   # degenerate outer tiers
+        axes, sizes = axes[1:], sizes[1:]
     model = "model" if "model" in mesh.shape else None
     n = arch.moe.num_experts
-    span = pods > 1 and n % (pods * data) == 0 and n >= pods * data
-    if span:
-        return moe_lib.EPSpec(num_pods=pods, ep_per_pod=data,
-                              pod_axis="pod", data_axis="data",
-                              model_axis=model)
-    return moe_lib.EPSpec(num_pods=1, ep_per_pod=data, pod_axis=None,
-                          data_axis="data", model_axis=model)
+    for k in range(len(axes)):                # longest suffix first
+        world = 1
+        for s in sizes[k:]:
+            world *= s
+        if k == len(axes) - 1 or (n % world == 0 and n >= world):
+            return moe_base.EPSpec.from_axes(axes[k:], sizes[k:],
+                                             model_axis=model)
+    return moe_base.EPSpec.from_axes(axes[-1:], sizes[-1:], model_axis=model)
 
 
 def make_plan(arch: ArchConfig, mesh, seq_len: int, global_batch: int,
-              mode: str) -> Optional[capacity.CapacityPlan]:
+              mode: str) -> Optional[capacity.DispatchPlan]:
     if not arch.is_moe:
         return None
     ep = make_ep_spec(arch, mesh)
-    pods = mesh.shape.get("pod", 1)
-    data = mesh.shape.get("data", 1)
-    tokens_per_device = max(1, (global_batch * seq_len) // (pods * data))
-    return capacity.make_plan(
+    nshard = 1
+    for a in sharding.hierarchy_axes(mesh):
+        nshard *= mesh.shape[a]
+    tokens_per_device = max(1, (global_batch * seq_len) // nshard)
+    return capacity.make_dispatch_plan(
         tokens_per_device=tokens_per_device,
         num_experts=arch.moe.num_experts, top_k=arch.moe.top_k,
         capacity_factor=arch.moe.capacity_factor,
-        num_pods=ep.num_pods, ep_per_pod=ep.ep_per_pod, mode=mode)
+        axis_sizes=ep.axis_sizes, axis_names=ep.axis_names, mode=mode,
+        comm=topology.tree_topology_nd(ep.axis_sizes))
 
 
 def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
                   ) -> Optional[gating.GateConfig]:
     if not arch.is_moe:
         return None
-    penalties = (1.0, 1.0, 1.0)
+    n_levels = max(3, len(plan.ratios) if plan is not None else 3)
+    penalties = (1.0,) * n_levels
     if aux_mode == "ta" and plan is not None:
-        model = topology.tpu_topology(ep.num_pods, ep.ep_per_pod)
-        sizes = tuple(int(s) for s in model.topo.level_sizes(0))
-        penalties = gating.ta_penalties(plan.ratios, level_sizes=sizes)
+        # the plan carries the full Eq. (7) ratio vector and the per-level
+        # member counts — no 2-level summary, works for any tree depth
+        penalties = gating.ta_penalties(plan.ratios,
+                                        level_sizes=plan.level_sizes)
         if len(penalties) < 3:
             penalties = penalties + (penalties[-1],) * (3 - len(penalties))
     return gating.GateConfig(
@@ -88,12 +101,10 @@ def resolve_num_chunks(arch: ArchConfig, plan, ep,
     from repro.core import comm_model
     links = None
     if mesh is not None:
-        links = comm_model.measured_moe_links(
-            mesh, data_axis=ep.data_axis, pod_axis=ep.pod_axis)
+        links = comm_model.measured_ep_links(mesh, ep.axis_names)
     terms = comm_model.moe_overlap_terms(
         plan, d_model=arch.d_model, d_ff=arch.moe.d_ff_expert,
         bytes_per_el=2 if arch.jnp_dtype == jnp.bfloat16 else 4,
-        num_pods=ep.num_pods, ep_per_pod=ep.ep_per_pod,
         activation=arch.activation, links=links)
     return comm_model.choose_num_chunks(**terms)
 
@@ -234,7 +245,7 @@ def input_specs(arch: ArchConfig, shape_name: str, mesh,
     """ShapeDtypeStruct pytree for every model input of this shape."""
     sh = INPUT_SHAPES[shape_name]
     B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
-    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    batch_axes = sharding.hierarchy_axes(mesh)
     bspec = batch_axes if len(batch_axes) > 1 else (
         batch_axes[0] if batch_axes else None)
     nshard = 1

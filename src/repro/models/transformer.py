@@ -9,7 +9,7 @@ small at 60-layer scale (critical for multi-pod compile times).  Sublayers:
     ffn  : mlp | moe | None
 
 MoE sublayers enter ``shard_map`` over the expert-parallel axes (see
-core/moe.py); dense compute relies on pjit sharding constraints
+core/dispatch/); dense compute relies on pjit sharding constraints
 (repro.sharding.constrain).
 """
 
@@ -24,8 +24,9 @@ import numpy as np
 
 from repro import sharding
 from repro.configs.base import ArchConfig
-from repro.core import dispatch as dispatch_lib, gating, moe as moe_lib
-from repro.core.capacity import CapacityPlan
+from repro.core import dispatch as dispatch_lib, gating
+from repro.core.capacity import DispatchPlan
+from repro.core.dispatch import base as moe_base
 from repro.models import layers, mamba as mamba_lib, mla as mla_lib
 from repro.models import xlstm as xlstm_lib
 
@@ -43,8 +44,8 @@ class ModelCtx:
     """Everything the forward pass needs besides params and data."""
     arch: ArchConfig
     mesh: Optional[object] = None
-    ep: Optional[moe_lib.EPSpec] = None
-    plan: Optional[CapacityPlan] = None          # a2a capacities
+    ep: Optional[moe_base.EPSpec] = None
+    plan: Optional[DispatchPlan] = None          # level-indexed a2a capacities
     gate_cfg: Optional[gating.GateConfig] = None
     use_flash: bool = False
     use_moe_kernel: bool = False
@@ -104,13 +105,23 @@ class ModelCtx:
     @property
     def moe_cfg(self):
         a = self.arch
-        return moe_lib.MoEConfig(
+        return moe_base.MoEConfig(
             d_model=a.d_model, d_ff=a.moe.d_ff_expert,
             num_experts=a.moe.num_experts, top_k=a.moe.top_k,
             capacity_factor=a.moe.capacity_factor,
             num_shared_experts=a.moe.num_shared_experts,
             activation=a.activation, dtype=a.jnp_dtype,
             use_kernel=self.use_moe_kernel, a2a_dtype=self.a2a_dtype)
+
+    @property
+    def frac_levels(self) -> int:
+        """Length of the ``frac_by_level`` metric vector (dispatch stages
+        of the EP hierarchy; 1 when the model has no MoE layers)."""
+        if self.plan is not None:
+            return self.plan.num_stages
+        if self.ep is not None:
+            return self.ep.num_stages
+        return 1
 
     def dispatch_for_layer(self, layer_idx: Optional[int],
                            decode: bool = False) -> str:
@@ -191,7 +202,7 @@ def _init_sublayer(key, sub: SubLayer, ctx: ModelCtx):
                                    a.jnp_dtype)
     elif sub.ffn == "moe":
         p["norm2"] = layers.init_norm(a.norm, a.d_model)
-        p["ffn"] = moe_lib.init_moe_params(ks[2], ctx.moe_cfg, ctx.ep,
+        p["ffn"] = moe_base.init_moe_params(ks[2], ctx.moe_cfg, ctx.ep,
                                            ctx.gate_cfg)
     return p
 
@@ -262,8 +273,7 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool, layer_idx=None):
     ep, cfg, gate_cfg = ctx.ep, ctx.moe_cfg, ctx.gate_cfg
     mesh = ctx.mesh
     d = x.shape[-1]
-    batch_axes = tuple(a for a in ("pod", "data")
-                       if mesh is not None and a in mesh.shape)
+    batch_axes = sharding.hierarchy_axes(mesh) if mesh is not None else ()
     replicated = ctx.decode_replicated
     name = ctx.dispatch_for_layer(layer_idx, decode)
     eng = dispatch_lib.make_engine(
@@ -278,7 +288,7 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool, layer_idx=None):
             metrics = {k: jax.lax.pmean(v, ax) for k, v in metrics.items()}
         return y.reshape(x_local.shape), metrics
 
-    pspecs = moe_lib.moe_param_specs(cfg, ep)
+    pspecs = moe_base.moe_param_specs(cfg, ep)
     pspecs = _merge_specs(p, pspecs)
     x_spec = (P() if replicated
               else P(batch_axes if len(batch_axes) > 1 else
@@ -317,7 +327,10 @@ def _merge_specs(params, partial_specs):
 
 
 def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
-                    aux0=0.0, layer_idx=None):
+                    aux0=0.0, frac0=None, layer_idx=None):
+    """Returns (x, aux, frac): the residual stream, the accumulated aux
+    loss, and the accumulated per-level dispatch-fraction vector (``frac0``
+    passed through unchanged — possibly None — for non-MoE sublayers)."""
     a = ctx.arch
     h = layers.norm_apply(p["norm1"], x, a.norm)
     if sub.mixer == "attn":
@@ -340,6 +353,7 @@ def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
         mix = _cross_attn(p["cross"], h, enc_out, ctx)
         x = x + mix
     aux = jnp.asarray(aux0, jnp.float32)
+    frac = frac0
     if sub.ffn == "mlp":
         h = layers.norm_apply(p["norm2"], x, a.norm)
         x = x + layers.mlp_apply(p["ffn"], h, a.activation)
@@ -349,8 +363,10 @@ def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
                                 layer_idx=layer_idx)
         x = x + y
         aux = aux + metrics["aux_loss"]
+        if frac is not None:
+            frac = frac + metrics["frac_by_level"]
     x = sharding.constrain(x, "batch", None, None)
-    return x, aux
+    return x, aux, frac
 
 
 def _cross_attn(p, x, enc_out, ctx: ModelCtx):
@@ -371,7 +387,7 @@ def _run_encoder(params, frames, ctx: ModelCtx):
     esub, n_enc = encoder_plan(ctx.arch)
 
     def body(x, p):
-        x, _ = _apply_sublayer(p["sub0"], x, esub[0], ctx)
+        x, _, _ = _apply_sublayer(p["sub0"], x, esub[0], ctx)
         return x, None
     x, _ = jax.lax.scan(body, frames, params["enc_groups"])
     return layers.norm_apply(params["enc_norm"], x, ctx.arch.norm)
@@ -396,7 +412,12 @@ def _overrides_hit_groups(ctx: ModelCtx, n_prefix: int, group, n_groups: int,
 
 
 def forward_features(params, batch, ctx: ModelCtx):
-    """Full-sequence forward up to the final norm. Returns (x, aux)."""
+    """Full-sequence forward up to the final norm.
+
+    Returns ``(x, aux, frac_by_level)``: features, the mean aux loss, and
+    the mean per-level dispatch-fraction vector over the MoE layers (None
+    for models without MoE layers).
+    """
     a = ctx.arch
     prefix, group, n_groups = layer_plan(a)
 
@@ -413,9 +434,12 @@ def forward_features(params, batch, ctx: ModelCtx):
         x = jnp.concatenate([patches, x[:, n:]], axis=1)
 
     aux = jnp.float32(0.0)
+    n_moe = n_groups * sum(1 for s in group if s.ffn == "moe")
+    frac = jnp.zeros((ctx.frac_levels,), jnp.float32) if n_moe else None
     for i, sub in enumerate(prefix):
-        x, aux = _apply_sublayer(params[f"prefix{i}"], x, sub, ctx,
-                                 enc_out=enc_out, aux0=aux, layer_idx=i)
+        x, aux, frac = _apply_sublayer(params[f"prefix{i}"], x, sub, ctx,
+                                       enc_out=enc_out, aux0=aux, frac0=frac,
+                                       layer_idx=i)
 
     n_prefix = len(prefix)
     if _overrides_hit_groups(ctx, n_prefix, group, n_groups):
@@ -423,37 +447,43 @@ def forward_features(params, batch, ctx: ModelCtx):
         # the schedule is layer-dependent, so unroll the group loop (each
         # group gets its own HLO with its own dispatch path).
         def run_group(carry, pg, base_idx):
-            x, aux = carry
+            x, aux, frac = carry
             for j, sub in enumerate(group):
-                x, aux = _apply_sublayer(pg[f"sub{j}"], x, sub, ctx,
-                                         enc_out=enc_out, aux0=aux,
-                                         layer_idx=base_idx + j)
-            return x, aux
+                x, aux, frac = _apply_sublayer(pg[f"sub{j}"], x, sub, ctx,
+                                               enc_out=enc_out, aux0=aux,
+                                               frac0=frac,
+                                               layer_idx=base_idx + j)
+            return x, aux, frac
         if ctx.remat:
             run_group = jax.checkpoint(run_group, static_argnums=(2,),
                                        prevent_cse=False)
         for g in range(n_groups):
             pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
-            x, aux = run_group((x, aux), pg, n_prefix + g * len(group))
+            x, aux, frac = run_group((x, aux, frac), pg,
+                                     n_prefix + g * len(group))
     else:
         def body(carry, p):
-            x, aux = carry
+            x, aux, frac = carry
             for j, sub in enumerate(group):
-                x, aux = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
-                                         enc_out=enc_out, aux0=aux)
-            return (x, aux), None
+                x, aux, frac = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
+                                               enc_out=enc_out, aux0=aux,
+                                               frac0=frac)
+            return (x, aux, frac), None
 
         if ctx.remat:
             body = jax.checkpoint(body, prevent_cse=False)
-        (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
+        (x, aux, frac), _ = jax.lax.scan(body, (x, aux, frac),
+                                         params["groups"])
 
     x = layers.norm_apply(params["final_norm"], x, a.norm)
-    return x, aux / max(1, n_groups * len(group))
+    if frac is not None:
+        frac = frac / max(1, n_moe)
+    return x, aux / max(1, n_groups * len(group)), frac
 
 
 def forward(params, batch, ctx: ModelCtx):
     """Full-sequence forward (train / prefill). Returns (logits, aux)."""
-    x, aux = forward_features(params, batch, ctx)
+    x, aux, _ = forward_features(params, batch, ctx)
     logits = layers.unembed_apply(params["embed"], x)
     logits = sharding.constrain(logits, "batch", None, "model")
     return logits, aux
@@ -483,14 +513,20 @@ def _fused_xent(params, x, labels, ctx: ModelCtx):
 
 def loss_fn(params, batch, ctx: ModelCtx, aux_weight: float = 1.0):
     labels = batch["labels"]
+    x, aux, frac = forward_features(params, batch, ctx)
     if ctx.fused_xent:
-        x, aux = forward_features(params, batch, ctx)
         nll = _fused_xent(params, x, labels, ctx)
     else:
-        logits, aux = forward(params, batch, ctx)
+        logits = layers.unembed_apply(params["embed"], x)
+        logits = sharding.constrain(logits, "batch", None, "model")
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
         nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
     nll = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
     total = nll + aux_weight * aux
-    return total, {"nll": nll, "aux": aux, "loss": total}
+    metrics = {"nll": nll, "aux": aux, "loss": total}
+    if frac is not None:
+        # mean per-level dispatch fractions over the MoE layers — the
+        # level-indexed replacement for the old frac_near/frac_far pair
+        metrics["frac_by_level"] = frac
+    return total, metrics

@@ -21,7 +21,9 @@ def _with_overrides(ctx: transformer.ModelCtx, dispatch_override):
     layer onto ``a2a_pipelined``, or a decode layer off the gather path).
     Names resolve through the core.dispatch engine registry; entries merge
     per layer index with the ctx's existing (arch/run-level) overrides,
-    serving-side entries winning."""
+    serving-side entries winning.  Plans are level-indexed, so overrides
+    behave identically on 2-level and N-level meshes — chunk alignment
+    rounds every stage capacity of the ctx's ``DispatchPlan``."""
     if dispatch_override is None:
         return ctx
     from repro.core import capacity, dispatch as dispatch_lib

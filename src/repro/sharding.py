@@ -42,6 +42,18 @@ class AxisRules:
         return n
 
 
+def hierarchy_axes(mesh) -> tuple:
+    """The mesh's batch/expert hierarchy axes, outermost-first.
+
+    Every mesh axis except the tensor-parallel ``model`` axis, in mesh
+    order — ``("data",)``, ``("pod", "data")``, ``("pod", "node", "data")``,
+    ... for 1/2/3-tier meshes.  This is the single place the level-indexed
+    stack derives its axis ordering from, so adding a topology tier only
+    means constructing a deeper mesh (see launch/mesh.py).
+    """
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
 def current_rules() -> Optional[AxisRules]:
     return getattr(_state, "rules", None)
 

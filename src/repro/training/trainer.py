@@ -74,8 +74,10 @@ def _accum_step(params, opt_state, batch, loss, opt_cfg, micro: int):
 
     zeros_g = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    zeros_m = {"nll": 0.0, "aux": 0.0, "loss": 0.0}
-    zeros_m = jax.tree_util.tree_map(jnp.float32, zeros_m)
+    mb0 = jax.tree_util.tree_map(lambda x: x[0], split)
+    m_shapes = jax.eval_shape(lambda p, mb: loss(p, mb)[1], params, mb0)
+    zeros_m = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), m_shapes)
     (gsum, msum), _ = jax.lax.scan(body, (zeros_g, zeros_m), split)
     grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
     metrics = jax.tree_util.tree_map(lambda m: m / n, msum)
@@ -98,8 +100,22 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
           ckpt_path: Optional[str] = None, eval_fn=None,
           data_seed: Optional[int] = None, verbose: bool = True
           ) -> TrainResult:
-    """End-to-end training driver (used by examples + benchmarks)."""
+    """End-to-end training driver (used by examples + benchmarks).
+
+    When ``run.topology`` carries a nested spec, the mesh's hierarchy axes
+    must match it — the level-indexed dispatch plan is derived from the
+    mesh, so a mismatched spec would silently train under the wrong
+    per-level capacities.
+    """
     aux_mode = aux_mode or run.aux_mode
+    want = run.mesh_axis_sizes()
+    if want:
+        got = tuple(mesh.shape[a] for a in sharding.hierarchy_axes(mesh))
+        if got != want:
+            raise ValueError(
+                f"RunConfig.topology {run.topology!r} implies hierarchy "
+                f"sizes {want} but the mesh has {got}; build the mesh with "
+                f"repro.launch.mesh.mesh_from_topology(run.topology)")
     ctx = model_lib.build_ctx(arch, mesh, seq_len=run.seq_len,
                               global_batch=run.global_batch,
                               aux_mode=aux_mode, remat=run.remat,
@@ -123,12 +139,21 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
             batch = shard_batch(data.batch(i), mesh)
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             if i % log_every == 0 or i == steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
+                # scalar metrics become floats; vector metrics (e.g. the
+                # level-indexed frac_by_level) become lists
+                m = {k: (float(v) if getattr(v, "ndim", 0) == 0
+                         else [float(x) for x in v])
+                     for k, v in metrics.items()}
                 losses.append(m["loss"])
                 history.append(m)
                 if verbose:
+                    fb = m.get("frac_by_level")
+                    extra = (" frac_by_level=[" +
+                             ",".join(f"{x:.2f}" for x in fb) + "]"
+                             if fb else "")
                     print(f"step {i:5d} loss {m['loss']:.4f} "
-                          f"nll {m['nll']:.4f} aux {m.get('aux', 0):.4f}")
+                          f"nll {m['nll']:.4f} aux {m.get('aux', 0):.4f}"
+                          f"{extra}")
         dt = time.time() - t0
         if ckpt_path:
             ckpt.save(ckpt_path, {"params": params, "opt": opt_state},

@@ -75,7 +75,7 @@ def test_unknown_path_raises():
     with pytest.raises(ValueError, match="unknown dispatch"):
         dispatch_lib.get_path("ragged_a2a")
     cfg, ep, gate_cfg, _, plan = _setup(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="requires a CapacityPlan"):
+    with pytest.raises(ValueError, match="requires a DispatchPlan"):
         dispatch_lib.make_engine("a2a", cfg=cfg, ep=ep, gate_cfg=gate_cfg)
 
 
@@ -103,7 +103,12 @@ def test_uniform_metrics_schema(key, mesh11, name):
                         plan=plan, num_chunks=2)
     assert set(metrics) == set(dispatch_lib.METRIC_KEYS)
     for k in dispatch_lib.METRIC_KEYS:
-        assert np.isfinite(float(metrics[k])), k
+        assert np.isfinite(np.asarray(metrics[k])).all(), k
+    # frac_by_level is a fixed-length vector (1 stage on this 1-axis EP
+    # spec) summing to 1; the near/far aliases derive from it
+    fb = np.asarray(metrics["frac_by_level"])
+    assert fb.shape == (1,)
+    assert fb.sum() == pytest.approx(1.0, abs=1e-6)
     # ample capacity + single rank: nothing drops, nothing leaves level <= 1
     assert float(metrics["dropped"]) == pytest.approx(0.0, abs=1e-6)
     assert float(metrics["frac_near"]) == pytest.approx(1.0, abs=1e-6)

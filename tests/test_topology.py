@@ -245,6 +245,134 @@ class TestRingTopology:
         assert float((ratios * n).sum()) == pytest.approx(8.0)
 
 
+class TestDispatchPlanLevels:
+    """Level-indexed DispatchPlan API (N-level generalization)."""
+
+    def test_two_level_plans_byte_identical_via_compat_aliases(self):
+        """make_dispatch_plan on a (pods, data) hierarchy must produce the
+        exact capacities make_plan (the PR-2 near/far entry point) does,
+        readable through the deprecated cap_near/cap_far properties."""
+        for pods, epp, mode in [(2, 4, "ta"), (2, 4, "even"), (1, 16, "ta"),
+                                (4, 8, "hir"), (2, 16, "ta")]:
+            old = C.make_plan(tokens_per_device=4096, num_experts=32,
+                              top_k=2, capacity_factor=1.25, num_pods=pods,
+                              ep_per_pod=epp, mode=mode)
+            sizes = (pods, epp) if pods > 1 else (epp,)
+            new = C.make_dispatch_plan(
+                tokens_per_device=4096, num_experts=32, top_k=2,
+                capacity_factor=1.25, axis_sizes=sizes, mode=mode)
+            assert new.caps == old.caps, (pods, epp, mode)
+            assert new.cap_near == old.cap_near
+            assert new.cap_far == old.cap_far
+            assert new.ratios == old.ratios
+
+    def test_three_level_caps_follow_bandwidth_ladder(self):
+        p = C.make_dispatch_plan(tokens_per_device=8192, num_experts=32,
+                                 top_k=2, capacity_factor=1.0,
+                                 axis_sizes=(2, 2, 2), mode="ta",
+                                 round_multiple=1)
+        assert p.num_stages == 3
+        assert p.level_axes == (("data",), ("node", "data"),
+                                ("pod", "node", "data"))
+        # innermost (ICI) stage gets the most capacity, outermost the least
+        assert p.caps[0] > p.caps[1] > p.caps[2] > 0
+        # stage ratios mirror the ICI : DCN : DCI bandwidth ordering
+        assert p.caps[1] / p.caps[2] == pytest.approx(
+            T.NODE_BW / T.DCI_BW, rel=0.05)
+
+    def test_degenerate_single_member_level_rule(self):
+        """Pinned: a level with no members beyond self has ratio 0; stage 0
+        then falls back to the *self* ratio (ratios[0]) so the folded-in
+        self chunk is never starved, and any outer empty stage is simply
+        inactive (cap 0)."""
+        # one device per pod: level 1 (intra-pod) is empty
+        p = C.make_plan(tokens_per_device=4096, num_experts=16, top_k=2,
+                        capacity_factor=1.0, num_pods=2, ep_per_pod=1,
+                        mode="ta", round_multiple=1)
+        assert p.level_sizes[1] == 0 and p.ratios[1] == 0.0
+        assert C.stage_ratio(p.ratios, p.level_sizes, 0) == p.ratios[0]
+        c_even = 4096 * 2 * 1.0 / 16
+        assert p.caps[0] == max(1, int(np.ceil(c_even * p.ratios[0])))
+        # middle axis of size 1: stage 1 inactive, stages 0/2 alive
+        p3 = C.make_dispatch_plan(tokens_per_device=4096, num_experts=16,
+                                  top_k=2, capacity_factor=1.0,
+                                  axis_sizes=(2, 1, 4), mode="ta",
+                                  round_multiple=1)
+        assert p3.caps[1] == 0
+        assert p3.caps[0] > 0 and p3.caps[2] > 0
+        assert p3.active_stages() == (0, 2)
+
+    @given(depth=st.integers(3, 4), arity=st.integers(2, 3),
+           fan=st.integers(2, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_property_deep_tree_ratios_non_increasing(self, depth, arity,
+                                                      fan):
+        """Eq. (7) ratio vectors from 3- and 4-level trees are
+        non-increasing with level (slower links never get bigger chunks
+        under the default bandwidth ladder)."""
+        sizes = (fan,) + (arity,) * (depth - 1)
+        m = T.tree_topology_nd(sizes)
+        assert m.topo.num_levels == depth + 1
+        r = T.per_level_ratios(m)
+        assert len(r) == depth + 1
+        assert (r > 0).all()
+        for a, b in zip(r, r[1:]):
+            assert a >= b - 1e-12
+        # conservation: sum_l n_l * ratio_l == P
+        n = m.topo.level_sizes(0)
+        assert float((r * n).sum()) == pytest.approx(m.topo.num_devices)
+
+    @given(tokens=st.integers(1024, 32768), cf=st.floats(0.5, 2.0),
+           sizes=st.sampled_from([(2, 2, 2), (2, 2, 4), (2, 4, 2),
+                                  (2, 2, 2, 2), (3, 2, 2)]),
+           k=st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_property_caps_preserve_total_capacity(self, tokens, cf, sizes,
+                                                   k):
+        """TA caps weighted by per-stage destination counts (self folded
+        into stage 0, the Eq. 3 send-volume accounting) preserve the even
+        plan's total capacity within integer rounding."""
+        world = int(np.prod(sizes))
+        experts = 2 * world
+        pe = C.make_dispatch_plan(tokens_per_device=tokens,
+                                  num_experts=experts, top_k=k,
+                                  capacity_factor=cf, axis_sizes=sizes,
+                                  mode="even", round_multiple=1)
+        pt = C.make_dispatch_plan(tokens_per_device=tokens,
+                                  num_experts=experts, top_k=k,
+                                  capacity_factor=cf, axis_sizes=sizes,
+                                  mode="ta", round_multiple=1)
+        assert pt.num_stages == len(sizes)
+
+        def dests(p, s):
+            return p.stage_dests(s) + (1 if s == 0 else 0)
+        tot_t = sum(pt.caps[s] * dests(pt, s) for s in pt.active_stages())
+        tot_e = sum(pe.caps[s] * dests(pe, s) for s in pe.active_stages())
+        if min(pe.caps[s] for s in pe.active_stages()) > 8:
+            assert abs(tot_t - tot_e) / tot_e < 0.05
+        # rounding: aligning to chunks never shrinks any stage
+        al = C.align_to_chunks(pt, 3)
+        for s in range(pt.num_stages):
+            assert al.caps[s] >= pt.caps[s]
+            if pt.caps[s]:
+                assert al.caps[s] % 3 == 0
+                assert al.caps[s] - pt.caps[s] < 3
+
+    def test_a2a_bytes_by_level(self):
+        p = C.make_dispatch_plan(tokens_per_device=4096, num_experts=16,
+                                 top_k=2, capacity_factor=1.0,
+                                 axis_sizes=(2, 2, 2), mode="ta")
+        b = C.a2a_bytes(p, d_model=128, bytes_per_el=2)
+        E = p.experts_per_rank
+        assert len(b["by_level"]) == 3
+        assert b["by_level"][0] == p.caps[0] * E * 1 * 128 * 2    # 1 peer
+        assert b["by_level"][1] == p.caps[1] * E * 2 * 128 * 2    # 1 node x 2
+        assert b["by_level"][2] == p.caps[2] * E * 4 * 128 * 2    # 1 pod x 4
+        # deprecated aliases stay consistent with the vector
+        assert b["near_bytes"] == b["by_level"][0]
+        assert b["far_bytes"] == sum(b["by_level"][1:])
+
+
 class TestCapacityProperties:
     @given(tokens=st.integers(8192, 65536), experts=st.sampled_from([16, 32, 64, 160]),
            k=st.integers(1, 6), pods=st.sampled_from([1, 2]),
