@@ -1,0 +1,172 @@
+"""Benchmark-regression gate: compare a fresh BENCH_dispatch.json against a
+committed baseline and fail (exit 1) on step-time regressions.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline results/BENCH_baseline.json \
+        --current BENCH_dispatch.json --tolerance 0.15
+
+Only rows present in both files are compared; ``*_FAILED`` rows in the
+current run fail outright; rows below ``--min-us`` are skipped as jitter;
+a baseline with rows but zero comparable ones fails loudly (a renamed
+sweep must refresh the baseline, not disarm the gate).
+
+Machines differ in absolute speed, so the gate is two-tier:
+
+1. **Per-row** (``--tolerance``, default ±15%): each row's cur/base ratio
+   is divided by the *median* ratio over all comparable rows — the robust
+   machine-speed estimate — and compared against the tolerance.  This
+   catches a regression in any one path/mode that the others did not
+   share.
+2. **Uniform** (``--uniform-guard``, default 30%): a slowdown shared by
+   every dispatch row shifts the median itself and normalizes away, so it
+   is caught through the guard rows — the ``dispatch_anchor_*`` fixed
+   pure-jnp workloads (they run **no repo code**) plus the einsum oracle
+   row (repo code, but none of the permutation hot path this lane
+   guards; its size damps the small anchors' timing noise).  If the guard
+   rows' normalized geomean drops below ``1 - uniform_guard``, the whole
+   dispatch pack regressed relative to them and the gate fails.  The
+   guard is looser than the per-row tolerance because small anchor rows
+   carry more relative timing noise.  Pure-anchor rows are *excluded*
+   from the per-row tier: no PR can regress code they do not run, so any
+   per-row movement there is machine noise by construction.
+
+``--absolute`` skips normalization entirely (same-runner comparisons).
+A missing baseline passes with a notice — that is how the trajectory
+bootstraps.
+"""
+
+import argparse
+import json
+import math
+import os
+import statistics
+import sys
+
+
+def load_rows(path):
+    """name -> us_per_call for every timed row of one BENCH json."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def compare(baseline, current, *, tolerance=0.15, min_us=50.0,
+            normalize=True, anchor="dispatch_anchor",
+            guard_rows="dispatch_anchor,dispatch_einsum",
+            uniform_guard=0.30):
+    """Returns (regressions, improvements, skipped, failed_rows,
+    uniform_failure).
+
+    regressions / improvements are ``(name, base_us, cur_us, ratio)`` where
+    ratio is the (normalized) cur/base factor; ratio > 1 + tolerance is a
+    regression.  Rows matching the ``anchor`` prefix run no repo code and
+    are excluded from the per-row tier.  ``uniform_failure`` is None or a
+    message describing a pack-wide slowdown detected via the
+    ``guard_rows`` prefixes.
+    """
+    failed = [n for n in current if n.endswith("_FAILED")]
+    common = sorted(n for n in baseline
+                    if n in current and not n.endswith("_FAILED"))
+    usable = [n for n in common
+              if baseline[n] >= min_us and current[n] >= min_us]
+    skipped = [n for n in common if n not in usable]
+
+    scale = 1.0
+    if normalize and usable:
+        scale = math.exp(statistics.median(
+            math.log(current[n] / baseline[n]) for n in usable))
+
+    regressions, improvements = [], []
+    for n in usable:
+        if anchor and n.startswith(anchor):
+            continue   # no repo code on an anchor row: movement == noise
+        ratio = current[n] / baseline[n] / scale
+        entry = (n, baseline[n], current[n], ratio)
+        if ratio > 1.0 + tolerance:
+            regressions.append(entry)
+        elif ratio < 1.0 - tolerance:
+            improvements.append(entry)
+
+    uniform_failure = None
+    prefixes = tuple(p for p in (guard_rows or "").split(",") if p)
+    guards = [n for n in usable if n.startswith(prefixes)] if prefixes \
+        else []
+    if normalize and guards:
+        log_rel = [math.log(current[n] / baseline[n] / scale)
+                   for n in guards]
+        guards_rel = math.exp(sum(log_rel) / len(log_rel))
+        if guards_rel < 1.0 - uniform_guard:
+            uniform_failure = (
+                f"guard rows are {1 / guards_rel:.2f}x faster than the "
+                f"dispatch pack relative to baseline (> {uniform_guard:.0%} "
+                "guard): the dispatch rows regressed uniformly")
+    return regressions, improvements, skipped, failed, uniform_failure
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="results/BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_dispatch.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="fractional per-row slowdown allowed (0.15 = 15%%)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="rows faster than this are timing jitter; skip")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw us instead of machine-normalized")
+    ap.add_argument("--anchor", default="dispatch_anchor",
+                    help="row-name prefix of the pure-compute anchor rows "
+                         "(excluded from the per-row tier)")
+    ap.add_argument("--guard-rows", default="dispatch_anchor,dispatch_einsum",
+                    help="comma-separated row-name prefixes forming the "
+                         "uniform-regression guard basis ('' disables)")
+    ap.add_argument("--uniform-guard", type=float, default=0.30,
+                    help="pack-wide slowdown vs the guard rows that fails "
+                         "the gate (looser than --tolerance: small anchor "
+                         "rows are noisy)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"[compare] no baseline at {args.baseline}; nothing to "
+              "compare against (bootstrap run) -> pass")
+        return 0
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    regs, imps, skipped, failed, uniform = compare(
+        base, cur, tolerance=args.tolerance, min_us=args.min_us,
+        normalize=not args.absolute, anchor=args.anchor,
+        guard_rows=args.guard_rows, uniform_guard=args.uniform_guard)
+
+    mode = "absolute" if args.absolute else "normalized"
+    n_usable = len([n for n in base
+                    if n in cur and not n.endswith("_FAILED")
+                    and base[n] >= args.min_us and cur[n] >= args.min_us])
+    print(f"[compare] {len(base)} baseline rows, {len(cur)} current rows, "
+          f"{mode} tolerance ±{args.tolerance:.0%}, "
+          f"{len(skipped)} skipped (< {args.min_us:.0f}us or one-sided)")
+    if base and n_usable == 0:
+        # a renamed sweep or an empty current run must not disarm the gate
+        print("[compare] FAIL: baseline has rows but ZERO are comparable — "
+              "row names changed or the current run is empty; refresh "
+              "results/BENCH_baseline.json alongside the sweep change")
+        return 1
+    for name, b, c, r in sorted(imps, key=lambda e: e[3]):
+        print(f"  IMPROVED  {name}: {b:.1f}us -> {c:.1f}us "
+              f"({(r - 1) * 100:+.1f}% rel)")
+    for name, b, c, r in sorted(regs, key=lambda e: -e[3]):
+        print(f"  REGRESSED {name}: {b:.1f}us -> {c:.1f}us "
+              f"({(r - 1) * 100:+.1f}% rel)")
+    for name in failed:
+        print(f"  FAILED    {name}: suite raised in the current run")
+    if uniform:
+        print(f"  UNIFORM   {uniform}")
+    if not regs and not failed and not uniform:
+        print("[compare] OK: no step-time regressions")
+        return 0
+    print(f"[compare] FAIL: {len(regs)} regression(s), "
+          f"{len(failed)} failed suite row(s)"
+          + (", uniform pack regression" if uniform else ""))
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Dispatch hot-path step-time sweep: every registered path x ``use_pallas``.
+
+The rows this module emits (``dispatch_<path>_pallas-<mode>``) are the
+step-time trajectory the benchmark-regression CI lane guards: they land in
+``BENCH_dispatch.json`` and are compared against the committed
+``results/BENCH_baseline.json`` by ``benchmarks.compare``.
+
+Modes swept per path: ``off`` (jnp reference permutation) and ``auto``
+(the engine default — Pallas kernels on TPU/GPU, reference elsewhere, so
+on CPU CI the two columns coincide and the kernel speedup shows up on
+accelerator runners).  On TPU an explicit ``on`` mode is added.
+
+Measurement discipline (shared CI runners are noisy): every configuration
+is compiled and warmed first, then timed in round-robin batches — one
+batch of each config per round — and the per-config minimum over rounds is
+reported (the ``timeit`` convention).  Interleaving spreads temporal noise
+spikes across all rows, which is what lets ``benchmarks.compare``'s
+machine-normalization cancel them.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
+from repro.core import dispatch as dispatch_lib, gating
+from repro.core.capacity import make_plan
+
+PATHS = ("a2a", "a2a_pipelined", "gather", "einsum")
+
+
+def _modes():
+    modes = [("off", False), ("auto", None)]
+    if jax.default_backend() == "tpu":
+        modes.append(("on", True))
+    return modes
+
+
+def run(quick: bool = False):
+    T = 128 if quick else 512
+    D, F, N, K = 64, 128, 8, 2
+    iters = 4 if quick else 8
+    rounds = 8 if quick else 12
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dispatch_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+                                 capacity_factor=2.0, dtype=jnp.float32)
+    ep = dispatch_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
+                             data_axis="data", model_axis="model")
+    gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="lb")
+    params = dispatch_lib.init_moe_params(jax.random.PRNGKey(0), cfg, ep,
+                                          gate_cfg)
+    plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
+                     capacity_factor=2.0, num_pods=1, ep_per_pod=1,
+                     mode="even")
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D), jnp.float32)
+
+    def _make(name, flag):
+        kw = {}
+        if name in ("a2a", "a2a_pipelined"):
+            kw["plan"] = plan
+        if name == "a2a_pipelined":
+            kw["num_chunks"] = 2
+        if name == "einsum":
+            kw["capacity"] = T
+        eng = dispatch_lib.make_engine(name, cfg=cfg, ep=ep,
+                                       gate_cfg=gate_cfg, use_pallas=flag,
+                                       **kw)
+        body = shard_map(lambda p, xx: eng(p, xx)[0], mesh=mesh,
+                         in_specs=(P(), P()), out_specs=P(),
+                         check_vma=False)
+        return jax.jit(body)
+
+    # compile + warm every config up front, then time round-robin
+    configs = []
+    for name in PATHS:
+        for mode, flag in _modes():
+            if name == "einsum" and mode != "off":
+                continue   # the oracle has no permutation kernels
+            configs.append((f"{name}_pallas-{mode}", _make(name, flag)))
+
+    # anchor rows: fixed pure-jnp workloads spelled out *here*, running no
+    # repo code at all — benchmarks.compare estimates the machine-speed
+    # scale from these (prefix "dispatch_anchor"), so a regression anywhere
+    # in src/repro (permutation hot path, grouped GEMM, gating) cannot
+    # shift the normalization and hide itself behind "the machine got
+    # slower".
+    w1 = jax.random.normal(jax.random.PRNGKey(9), (N, D, F), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(10), (N, F, D), jnp.float32)
+    xa = jax.random.normal(jax.random.PRNGKey(8), (N, 8 * T, D),
+                           jnp.float32)
+    configs.append(("anchor_ffn", jax.jit(
+        lambda p, xx, _xa=xa, _w1=w1, _w2=w2: jnp.einsum(
+            "ecf,efd->ecd", jax.nn.silu(jnp.einsum("ecd,edf->ecf", _xa,
+                                                   _w1)), _w2))))
+    ma = jax.random.normal(jax.random.PRNGKey(7), (768, 768), jnp.float32)
+    configs.append(("anchor_matmul", jax.jit(
+        lambda p, xx, _a=ma: (_a @ _a) @ _a)))
+
+    print(f"# dispatch sweep: T={T} d={D} E={N} k={K} "
+          f"backend={jax.default_backend()} "
+          f"({rounds} interleaved rounds x {iters} iters, min)")
+    with mesh:
+        for _, fn in configs:
+            jax.block_until_ready(fn(params, x))
+            jax.block_until_ready(fn(params, x))
+        samples = {label: [] for label, _ in configs}
+        for _ in range(rounds):
+            for label, fn in configs:
+                # anchors set the compare gate's machine-speed scale, so
+                # their min must converge hardest: oversample them (they
+                # are also the cheapest rows)
+                reps = 4 if label.startswith("anchor") else 1
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        out = fn(params, x)
+                    jax.block_until_ready(out)
+                    samples[label].append(
+                        (time.perf_counter() - t0) / iters * 1e6)
+
+    rows = []
+    print(f"{'config':>28s}{'us/call':>10s}")
+    for label, _ in configs:
+        us = float(min(samples[label]))
+        print(f"{label:>28s}{us:10.1f}")
+        rows.append((f"dispatch_{label}", us,
+                     f"T={T};d={D};E={N};k={K};"
+                     f"backend={jax.default_backend()}"))
+
+    # cross-check while we are here: step-time rows are only comparable if
+    # the paths still agree (guards against benchmarking a broken kernel).
+    # Reuse the compiled configs; a blown tolerance raises, which run.py
+    # records as a dispatch_FAILED row — and that fails the compare gate.
+    fns = dict(configs)
+    with mesh:
+        y_a2a = np.asarray(fns["a2a_pallas-auto"](params, x))
+        y_oracle = np.asarray(fns["einsum_pallas-off"](params, x))
+    err = float(np.abs(y_a2a - y_oracle).max())
+    print(f"# a2a vs einsum oracle max err: {err:.2e}")
+    if err > 1e-4:
+        raise RuntimeError(
+            f"a2a diverged from the einsum oracle (max abs err {err:.2e}); "
+            "refusing to report step times for broken dispatch math")
+    rows.append(("dispatch_oracle_err", err * 1e6, f"max_abs_err={err:.2e}"))
+    return rows

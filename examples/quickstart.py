@@ -34,10 +34,16 @@ def main():
           f"{[round(float(r), 3) for r in r3]}\n")
 
     # 2. Train the paper's model (reduced) with the topology-aware loss.
+    # RunConfig.use_pallas picks the token-permutation implementation in
+    # the dispatch hot path: None (default) = auto — the Pallas
+    # kernels/moe_permute sort-based permute/unpermute on TPU/GPU, the jnp
+    # reference on CPU (so this script is identical math everywhere);
+    # True/False force it.
     mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_config("gpt3_medium_moe").reduced()
     run = RunConfig(seq_len=64, global_batch=4, learning_rate=1e-3,
-                    total_steps=20, warmup_steps=2, aux_mode="ta")
+                    total_steps=20, warmup_steps=2, aux_mode="ta",
+                    use_pallas=None)
     print("== training gpt3-medium-moe (reduced) with l_topo ==")
     res = trainer.train(arch, run, mesh, steps=15, log_every=5)
 

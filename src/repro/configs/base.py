@@ -154,6 +154,13 @@ class RunConfig:
     # per-layer (global_layer_idx, path_name) pairs; wins over
     # MoEArch.dispatch_override for the same layer index.
     dispatch_override: tuple = ()
+    # moe_permute token-permutation kernels in the dispatch hot path:
+    # None = auto (Pallas on TPU/GPU, jnp reference elsewhere; setting
+    # REPRO_KERNEL_INTERPRET=1 flips auto onto interpreted kernels — the
+    # CPU CI lane).  True forces the kernels — on CPU that means the slow
+    # Pallas *interpreter*, so True is for validation, not CPU speed;
+    # False forces the jnp reference everywhere.
+    use_pallas: Optional[bool] = None
     # Nested topology spec in the paper's Fig. 2 notation, e.g.
     # ((2, 2), (2, 2)) for a 3-tier pod x node x data hierarchy of 8
     # devices.  Empty = take the hierarchy from the mesh the caller built.

@@ -14,6 +14,7 @@ from repro.core.dispatch.base import (          # noqa: F401
     EPSpec,
     MoEConfig,
     expert_ffn,
+    expert_ffn_flat,
     init_moe_params,
     moe_param_specs,
     shared_ffn,
@@ -29,18 +30,23 @@ from repro.core.dispatch.engine import (        # noqa: F401
     register,
 )
 from repro.core.dispatch.routing import (       # noqa: F401
+    DispatchIndices,
     Routing,
     Selection,
+    build_indices,
+    gather_inverse,
     pad_selection,
     route,
     score_matrix,
     select,
+    slice_selection,
 )
 from repro.core.dispatch.schedule import software_pipeline  # noqa: F401
 from repro.core.dispatch.transport import (     # noqa: F401
     A2ATransport,
     GatherTransport,
     Stage,
+    expert_segments,
     plan_stages,
     wire_a2a,
 )

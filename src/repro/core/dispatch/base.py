@@ -203,6 +203,39 @@ def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
     return y
 
 
+def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
+                    *, chunk_granular: bool = False):
+    """Segment-offset grouped expert FFN on a flat [R, d] row buffer.
+
+    ``seg_offsets`` is the static [E_local + 1] offset vector of the
+    contiguous expert spans the moe_permute dispatch delivers (see
+    ``moe_gemm.ops.grouped_ffn_segments``).  Semantics match
+    :func:`expert_ffn` on the segment-reshaped view — same kernel routing,
+    same model-axis psum — the entry just takes the sorted flat layout the
+    permutation kernels emit, so the engine never re-boxes rows.
+    """
+    offs = tuple(int(o) for o in seg_offsets)
+    if cfg.use_kernel:
+        from repro.kernels.moe_gemm import ops as moe_gemm_ops
+        y = moe_gemm_ops.grouped_ffn_segments(
+            x_flat, offs, params["w_in"], params.get("w_gate"),
+            params["w_out"], activation=cfg.activation,
+            row_align=128 if chunk_granular else 1)
+    else:
+        E = len(offs) - 1
+        widths = {offs[e + 1] - offs[e] for e in range(E)}
+        assert len(widths) == 1, (
+            f"ragged segments {offs} need cfg.use_kernel; static capacity "
+            "plans always produce equal expert spans")
+        xg = x_flat.reshape(E, offs[1] - offs[0], x_flat.shape[-1])
+        h = _act(cfg, xg, params)
+        y = jnp.einsum("ecf,efd->ecd", h, params["w_out"]).reshape(
+            -1, x_flat.shape[-1])
+    if ep.model_axis is not None:
+        y = jax.lax.psum(y, ep.model_axis)
+    return y
+
+
 def shared_ffn(params, x, cfg: MoEConfig, ep: EPSpec):
     if cfg.activation == "swiglu":
         h = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_in"])

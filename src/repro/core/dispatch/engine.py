@@ -40,7 +40,10 @@ import jax.numpy as jnp
 from repro.core import gating
 from repro.core.capacity import DispatchPlan
 from repro.core.dispatch import routing, schedule, transport
-from repro.core.dispatch.base import EPSpec, MoEConfig, expert_ffn, shared_ffn
+from repro.core.dispatch.base import (EPSpec, MoEConfig, expert_ffn,
+                                      expert_ffn_flat, shared_ffn)
+from repro.core.dispatch.routing import _prod
+from repro.kernels.moe_permute import ops as permute_ops
 
 #: Uniform metrics schema every path resolves to.  ``frac_by_level`` is a
 #: ``[num_stages]`` vector; ``frac_near``/``frac_far`` are deprecated
@@ -97,6 +100,10 @@ class DispatchEngine:
     num_chunks: int = 1               # a2a_pipelined schedule depth
     capacity: Optional[int] = None    # einsum buffer capacity (None = cf rule)
     tokens_replicated: bool = False   # gather: tokens already on every rank
+    # Token-permutation implementation for the dispatch/combine hot path:
+    # None = auto (Pallas kernels on TPU/GPU, the jnp reference elsewhere);
+    # True/False force it.  See repro.kernels.moe_permute.ops.
+    use_pallas: Optional[bool] = None
 
     @property
     def name(self) -> str:
@@ -130,7 +137,8 @@ def make_engine(name: str, *, cfg: MoEConfig, ep: EPSpec,
                 gate_cfg: gating.GateConfig,
                 plan: Optional[DispatchPlan] = None, num_chunks: int = 1,
                 capacity: Optional[int] = None,
-                tokens_replicated: bool = False) -> DispatchEngine:
+                tokens_replicated: bool = False,
+                use_pallas: Optional[bool] = None) -> DispatchEngine:
     """Resolve ``name`` against the registry and bind the static config."""
     path = get_path(name)
     if path.needs_plan and plan is None:
@@ -138,7 +146,8 @@ def make_engine(name: str, *, cfg: MoEConfig, ep: EPSpec,
     return DispatchEngine(path=path, cfg=cfg, ep=ep, gate_cfg=gate_cfg,
                           plan=plan, num_chunks=max(1, int(num_chunks)),
                           capacity=capacity,
-                          tokens_replicated=tokens_replicated)
+                          tokens_replicated=tokens_replicated,
+                          use_pallas=use_pallas)
 
 
 def dispatch_moe(name: str, params, x, *, cfg: MoEConfig, ep: EPSpec,
@@ -155,22 +164,30 @@ def dispatch_moe(name: str, params, x, *, cfg: MoEConfig, ep: EPSpec,
 
 def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     """The one staged implementation behind both ``a2a`` and
-    ``a2a_pipelined``: shared routing, chunk-sliced stage-list transport,
-    and the software-pipeline schedule (serialized when ``num_chunks == 1``).
+    ``a2a_pipelined``: shared routing, the shared sort-based buffer builder
+    (``routing.build_indices`` + the moe_permute kernels), chunk-sliced
+    stage-list transport, and the software-pipeline schedule (serialized
+    when ``num_chunks == 1``).
 
-    Routing, capacities and combine weights are identical across chunk
-    counts, so outputs are allclose at matched capacities (the per-token
-    accumulation order over chunks may differ in the last ulp).
+    Dispatch is one fused permute per chunk — tokens gathered straight into
+    the (stage, destination, expert)-sorted capacity buffers — and combine
+    is the inverse permutation with the gate-weight multiply fused in
+    (``eng.use_pallas`` picks kernel vs reference).  Routing, capacities and
+    combine weights are identical across chunk counts, so outputs are
+    allclose at matched capacities (the per-token accumulation order over
+    chunks may differ in the last ulp).
     """
     cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
     T, d = x.shape
     tr = transport.A2ATransport(ep=ep, wire_dtype=cfg.a2a_dtype)
     stages = transport.plan_stages(plan, ep)
 
-    routed = routing.route(params, x, cfg, ep, plan, gate_cfg)
+    routed = routing.route(params, x, cfg, ep, plan, gate_cfg,
+                           with_bufs=False)
     kept_unpadded = sum(sel.valid.sum() for _, sel in routed.sels)
     num_chunks = max(1, int(num_chunks))
     chunked = num_chunks > 1
+    topk_idx = routed.gate_out["topk_idx"]
 
     # per-stage state: (transport stage, padded selection, capacity axis,
     # per-chunk capacity, expert-row count per chunk)
@@ -178,34 +195,49 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     for (s, sel), stage in zip(routed.sels, stages):
         cap_axis = s + 2
         sel = routing.pad_selection(sel, axis=cap_axis, multiple=num_chunks)
-        cpc = sel.buf.shape[cap_axis] // num_chunks
+        cpc = sel.idx.shape[cap_axis] // num_chunks
         work.append((stage, sel, cap_axis, cpc, stage.num_dests * cpc))
 
-    def chunk(a, j, cap_axis, cpc):
-        return jax.lax.slice_in_dim(a, j * cpc, (j + 1) * cpc, axis=cap_axis)
+    # the shared buffer builder: chunk j's capacity slice of every stage,
+    # flattened into one sort-order index set (sync == the single chunk 0)
+    indices = [routing.build_indices(
+        tuple((stage.index,
+               routing.slice_selection(sel, cap_axis, j * cpc, cpc))
+              for stage, sel, cap_axis, cpc, _ in work),
+        topk_idx, T) for j in range(num_chunks)]
 
     def dispatch(j):
-        parts = [tr.dispatch(chunk(sel.buf, j, cap_axis, cpc), stage)
-                 for stage, sel, cap_axis, cpc, _ in work]
+        di = indices[j]
+        flat = permute_ops.permute(x, di.slot_to_token,
+                                   use_pallas=eng.use_pallas)      # [S_j, d]
+        parts = []
+        for (stage, *_), (_, off, shape) in zip(work, di.stage_spans()):
+            buf = jax.lax.slice_in_dim(flat, off, off + _prod(shape), axis=0)
+            parts.append(tr.dispatch(buf.reshape(shape + (d,)), stage))
         return parts[0] if len(parts) == 1 \
             else jnp.concatenate(parts, axis=1)
 
     def compute(j, xin):
-        return expert_ffn(params, xin, cfg, ep, chunk_granular=chunked)
+        # contiguous expert spans -> the segment-offset grouped GEMM entry
+        E_l, R, _ = xin.shape
+        segs = transport.expert_segments(E_l, R)
+        y = expert_ffn_flat(params, xin.reshape(E_l * R, d), segs, cfg, ep,
+                            chunk_granular=chunked)
+        return y.reshape(E_l, R, d)
 
     def combine(out, j, y_exp):
         if out is None:
             out = jnp.zeros((T, d), y_exp.dtype)
-        off = 0
-        for stage, sel, cap_axis, cpc, rows in work:
+        di = indices[j]
+        flats, off = [], 0
+        for stage, _, _, _, rows in work:
             back = tr.combine(y_exp[:, off:off + rows], stage)
             off += rows
-            w = chunk(sel.w, j, cap_axis, cpc)
-            v = chunk(sel.valid, j, cap_axis, cpc)
-            idx = chunk(sel.idx, j, cap_axis, cpc)
-            wgt = (w * v).astype(y_exp.dtype)
-            out = out.at[idx].add(back * wgt[..., None])
-        return out
+            flats.append(back.reshape(-1, d))
+        y_flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, 0)
+        mixed = permute_ops.unpermute(y_flat, di.inv_idx, di.inv_w,
+                                      use_pallas=eng.use_pallas)
+        return out + mixed.astype(out.dtype)
 
     out = schedule.software_pipeline(num_chunks, dispatch, compute, combine,
                                      None)
@@ -271,11 +303,16 @@ def _gather_path(params, x, eng: DispatchEngine):
     # real balance/topology loss (decode callers ignore metrics anyway).
     gate_out = gating.gate_forward(params["gate"], xg, gate_cfg, None)
     aux = gating.aux_loss(gate_out, gate_cfg, levels)
-    w_mine = routing.gather_weights(gate_out, my_rank, E_l)      # [Tg, E_l]
 
     xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)                # [E_l, Tg, d]
     y = expert_ffn(params, xin, cfg, ep)                         # [E_l, Tg, d]
-    y = jnp.einsum("etd,te->td", y, w_mine.astype(y.dtype))      # [Tg, d]
+    # combine through the same weighted inverse-permutation the staged
+    # paths use: the dense [E_l, Tg] grid is a degenerate slot buffer
+    Tg = xg.shape[0]
+    inv_idx, inv_w = routing.gather_inverse(gate_out, my_rank, E_l, Tg)
+    y = permute_ops.unpermute(y.reshape(E_l * Tg, -1), inv_idx, inv_w,
+                              use_pallas=eng.use_pallas)         # [Tg, d]
+    y = y.astype(x.dtype)
 
     y = tr.reduce(y)
     y = tr.slice_local(y, my_rank, x.shape[0])

@@ -6,22 +6,32 @@ weights — which is exactly what makes their outputs equivalent at matched
 capacities.  The execution schedule (transport.py / schedule.py) is the only
 thing that differs between them.
 
-Selections are ``Selection(w, idx, valid, buf)`` named tuples:
+Selections are ``Selection(w, idx, valid, buf, eid)`` named tuples:
 
     w      [..., cap]      combine weight per selected slot (-1 = empty)
     idx    [..., cap]      source-token index of each slot
     valid  [..., cap]      1.0 where the slot holds a real token
-    buf    [..., cap, d]   the gathered (and masked) token payload
+    buf    [..., cap, d]   the gathered (and masked) token payload, or None
+                           when the engine builds buffers through the
+                           moe_permute kernels (``route(with_bufs=False)``)
+    eid    [..., cap]      global expert id each slot feeds
 
 Stage ``s``'s selection has ``s + 1`` leading destination dims (the
 innermost ``s + 1`` EP mesh axes, outermost first), so its capacity axis is
 ``s + 2`` and its payload feeds the matching transport
 :class:`~repro.core.dispatch.transport.Stage` directly.
+
+The hot path does not consume ``buf`` at all any more: :func:`build_indices`
+flattens the selections of every active stage into the
+(stage, destination, expert, slot) sort order — one ``slot_to_token`` index
+vector, per-stage segment shapes, and the inverse ``[T, K]`` pick map — and
+the ``repro.kernels.moe_permute`` pair moves the payload in one fused
+gather each way.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +46,8 @@ class Selection(NamedTuple):
     w: jnp.ndarray
     idx: jnp.ndarray
     valid: jnp.ndarray
-    buf: jnp.ndarray
+    buf: Optional[jnp.ndarray] = None
+    eid: Optional[jnp.ndarray] = None
 
 
 class Routing(NamedTuple):
@@ -73,13 +84,22 @@ def score_matrix(gate_out, num_experts: int):
     return s.T
 
 
-def select(score_rows, x, cap: int) -> Selection:
-    """Top-``cap`` tokens for each leading row of score_rows [..., T]."""
+def select(score_rows, x, cap: int, eids=None,
+           with_buf: bool = True) -> Selection:
+    """Top-``cap`` tokens for each leading row of score_rows [..., T].
+
+    ``eids`` (same shape as the leading dims) records the global expert id
+    of each row; ``with_buf=False`` skips materializing the per-slot gather
+    (the engine builds the payload buffers through the moe_permute kernels
+    from the flattened indices instead).
+    """
     cap = min(cap, score_rows.shape[-1])
     w, idx = jax.lax.top_k(score_rows, cap)
     valid = (w > 0).astype(x.dtype)
-    buf = jnp.take(x, idx, axis=0) * valid[..., None]
-    return Selection(w, idx, valid, buf)
+    buf = jnp.take(x, idx, axis=0) * valid[..., None] if with_buf else None
+    eid = (jnp.broadcast_to(eids[..., None], idx.shape)
+           if eids is not None else None)
+    return Selection(w, idx, valid, buf, eid)
 
 
 def _prod(xs) -> int:
@@ -102,7 +122,7 @@ def _rank_offsets(inner_sizes) -> jnp.ndarray:
 
 
 def route(params, x, cfg: MoEConfig, ep: EPSpec, plan: DispatchPlan,
-          gate_cfg: gating.GateConfig) -> Routing:
+          gate_cfg: gating.GateConfig, with_bufs: bool = True) -> Routing:
     """Gating + per-level token selection for the staged (a2a) paths.
 
     Stage ``s`` targets the experts of ranks sharing this rank's outer
@@ -146,7 +166,7 @@ def route(params, x, cfg: MoEConfig, ep: EPSpec, plan: DispatchPlan,
             own = (jnp.arange(sizes[k]) == coords[k]).reshape(
                 (sizes[k],) + (1,) * (len(inner) + 1))
             sc = jnp.where(own, -1.0, sc)
-        sels.append((s, select(sc, x, cap)))
+        sels.append((s, select(sc, x, cap, eids=eids, with_buf=with_bufs)))
     return Routing(tuple(sels), gate_out, aux, levels)
 
 
@@ -164,10 +184,126 @@ def pad_selection(sel: Selection, axis: int, multiple: int) -> Selection:
         return sel
 
     def _pad(a):
+        if a is None:
+            return None
         widths = [(0, 0)] * a.ndim
         widths[axis] = (0, pad)
         return jnp.pad(a, widths)
     return Selection(*(_pad(a) for a in sel))
+
+
+def slice_selection(sel: Selection, axis: int, start: int,
+                    size: int) -> Selection:
+    """Static slice of a selection's capacity axis (one pipeline chunk)."""
+    def _slice(a):
+        if a is None:
+            return None
+        return jax.lax.slice_in_dim(a, start, start + size, axis=axis)
+    return Selection(*(_slice(a) for a in sel))
+
+
+class DispatchIndices(NamedTuple):
+    """Flattened sort-order view of one set of per-stage selections.
+
+    The flat slot order is (stage, destination..., expert, capacity-slot) —
+    exactly the layout the staged all-to-all transports and the grouped
+    expert GEMM consume, so dispatch is one fused gather
+    (``moe_permute.permute``) and combine is its weighted inverse
+    (``moe_permute.unpermute``) with the gate multiply fused in.
+
+    ``slot_to_token[s]`` is the source token of slot ``s`` (sentinel ``T``
+    for empty slots); ``slot_w`` its combine weight (0 when empty);
+    ``inv_idx[t, k]`` / ``inv_w[t, k]`` locate and weight token ``t``'s
+    ``k``-th expert pick among the slots (sentinel ``S`` when the pick was
+    dropped or lives outside this selection set, e.g. another pipeline
+    chunk).  ``shapes`` are the static per-stage ``idx`` shapes, in stage
+    order, for carving stage buffers back out of the flat [S, d] payload.
+    """
+    slot_to_token: jnp.ndarray    # [S] int32, sentinel T
+    slot_w: jnp.ndarray           # [S] f32, 0 for empty slots
+    inv_idx: jnp.ndarray          # [T, K] int32, sentinel S
+    inv_w: jnp.ndarray            # [T, K] f32, 0 for dropped picks
+    shapes: tuple                 # ((stage_idx, idx_shape), ...)
+
+    @property
+    def num_slots(self) -> int:
+        return self.slot_to_token.shape[0]
+
+    def stage_spans(self) -> tuple:
+        """Static (stage_idx, start, shape) row spans of the flat buffer."""
+        spans, off = [], 0
+        for s, shape in self.shapes:
+            n = _prod(shape)
+            spans.append((s, off, shape))
+            off += n
+        return tuple(spans)
+
+
+def build_indices(sels, topk_idx, num_tokens: int) -> DispatchIndices:
+    """The shared buffer builder: selections -> sort indices + inverse map.
+
+    ``sels`` is ``((stage_idx, Selection), ...)`` — the active stages of a
+    :func:`route` result, optionally capacity-sliced into one pipeline
+    chunk (:func:`slice_selection`).  Selections must carry ``eid``
+    (``route`` always attaches it).  ``topk_idx`` is the gate's [T, K]
+    expert choice used to invert the permutation: a (token, expert) pair
+    occupies at most one slot globally — each expert is reachable at
+    exactly one stage and appears in one top-``cap`` row there — so the
+    inverse is a plain scatter with no collisions.
+    """
+    parts_tok, parts_w, parts_valid, parts_eid, shapes = [], [], [], [], []
+    for s, sel in sels:
+        assert sel.eid is not None, "build_indices needs Selection.eid"
+        shapes.append((s, tuple(sel.idx.shape)))
+        parts_tok.append(sel.idx.reshape(-1))
+        parts_w.append(sel.w.reshape(-1))
+        parts_valid.append(sel.valid.reshape(-1))
+        parts_eid.append(sel.eid.reshape(-1))
+
+    def _cat(parts):
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    tok = _cat(parts_tok).astype(jnp.int32)
+    valid = _cat(parts_valid) > 0
+    w = jnp.where(valid, _cat(parts_w).astype(jnp.float32), 0.0)
+    eid = _cat(parts_eid).astype(jnp.int32)
+    S = tok.shape[0]
+    K = topk_idx.shape[1]
+
+    slot_to_token = jnp.where(valid, tok, jnp.int32(num_tokens))
+    # which of its token's K picks each slot serves (valid slots always
+    # match: w > 0 means the token picked this slot's expert)
+    match = jnp.take(topk_idx, tok, axis=0) == eid[:, None]       # [S, K]
+    k_of_slot = jnp.argmax(match, axis=1).astype(jnp.int32)
+    t_scatter = jnp.where(valid, tok, jnp.int32(num_tokens))      # OOB drop
+    inv_idx = jnp.full((num_tokens, K), S, jnp.int32)
+    inv_idx = inv_idx.at[t_scatter, k_of_slot].set(
+        jnp.arange(S, dtype=jnp.int32), mode="drop")
+    inv_w = jnp.zeros((num_tokens, K), jnp.float32)
+    inv_w = inv_w.at[t_scatter, k_of_slot].set(w, mode="drop")
+    return DispatchIndices(slot_to_token, w, inv_idx, inv_w, tuple(shapes))
+
+
+def gather_inverse(gate_out, my_rank, experts_per_rank: int,
+                   num_tokens: int):
+    """Inverse pick map for the weights-stationary ``gather`` path.
+
+    The gather path's dense [E_l, Tg] expert-output grid is a degenerate
+    slot buffer — slot ``e * Tg + t`` holds expert ``e``'s output for token
+    ``t`` — so its combine resolves through the same
+    ``moe_permute.unpermute`` as the staged paths.  Returns
+    ``(inv_idx, inv_w)`` of shape [Tg, K] (sentinel ``E_l * Tg`` for picks
+    owned by other ranks).
+    """
+    topk_idx, topk_w = gate_out["topk_idx"], gate_out["topk_weight"]
+    e_local = topk_idx - my_rank * experts_per_rank
+    local = (e_local >= 0) & (e_local < experts_per_rank)
+    sentinel = jnp.int32(experts_per_rank * num_tokens)
+    t = jnp.arange(num_tokens, dtype=jnp.int32)[:, None]
+    inv_idx = jnp.where(local, e_local.astype(jnp.int32) * num_tokens + t,
+                        sentinel)
+    inv_w = jnp.where(local, topk_w, 0.0).astype(jnp.float32)
+    return inv_idx, inv_w
 
 
 def gather_weights(gate_out, my_rank, experts_per_rank: int):

@@ -16,6 +16,14 @@ routing or scheduling.  Two families exist:
   are (all-)gathered to every EP rank and partial expert outputs are
   psum-combined; no all-to-all at all.
 
+Buffer layout contract with the moe_permute dispatch: the payload arrives
+already (stage, destination, expert, slot)-sorted, so each stage's
+delivered rows are *contiguous per-expert spans* — :func:`expert_segments`
+derives the static segment-offset vector the grouped GEMM entry
+(``moe_gemm.ops.grouped_ffn_segments``) consumes, and the all_to_all
+chains themselves are unchanged (equal splits of a sorted buffer stay
+sorted).
+
 New transports (e.g. a ragged / sparsity-aware exchange) plug in by
 implementing the same dispatch/combine surface and get picked up by a path
 definition in engine.py.
@@ -89,6 +97,14 @@ def plan_stages(plan, ep: EPSpec) -> tuple:
     return tuple(Stage(index=s, axis_names=names[n - s - 1:],
                        axis_sizes=sizes[n - s - 1:], cap=plan.caps[s])
                  for s in range(n) if plan.caps[s] > 0)
+
+
+def expert_segments(num_experts: int, rows_per_expert: int) -> tuple:
+    """Static [E + 1] segment-offset vector of a delivered stage buffer:
+    expert ``e`` owns flat rows ``offs[e]:offs[e + 1]`` of the
+    [E * rows, d] view — the contract between the sorted a2a payload and
+    ``moe_gemm.ops.grouped_ffn_segments``."""
+    return tuple(rows_per_expert * e for e in range(num_experts + 1))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -5,6 +5,7 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.moe_gemm.kernel import grouped_ffn_pallas
 from repro.kernels.moe_gemm.ref import grouped_ffn_ref
@@ -29,6 +30,45 @@ def grouped_ffn(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
     return _ref_jit(x, w_in, w_gate, w_out, activation)
 
 
+def grouped_ffn_segments(x, seg_offsets, w_in, w_gate, w_out, *,
+                         activation: str = "swiglu", row_align: int = 1):
+    """Segment-offset grouped FFN over a flat [R, d] row buffer.
+
+    ``seg_offsets`` is a static, monotone [E + 1] offset vector: expert
+    ``e`` owns rows ``seg_offsets[e]:seg_offsets[e + 1]``.  This is the
+    layout the moe_permute dispatch emits — contiguous expert spans, in
+    (stage, destination, expert) sort order per expert — so the equal-width
+    case (every static capacity plan) reshapes straight onto the blocked
+    ``grouped_ffn`` with zero data movement; ragged offsets fall back to
+    per-segment calls.  ``row_align > 1`` routes equal segments through the
+    row-padding chunk entry (pipelined dispatch slices are usually not
+    MXU-tile multiples).
+    """
+    offs = tuple(int(o) for o in seg_offsets)
+    E = w_in.shape[0]
+    assert len(offs) == E + 1 and offs[0] == 0 and offs[-1] == x.shape[0], \
+        (offs, E, x.shape)
+    widths = [offs[e + 1] - offs[e] for e in range(E)]
+    d = x.shape[-1]
+    if len(set(widths)) == 1:
+        xg = x.reshape(E, widths[0], d)
+        if row_align > 1:
+            y = grouped_ffn_chunk(xg, w_in, w_gate, w_out,
+                                  activation=activation, row_align=row_align)
+        else:
+            y = grouped_ffn(xg, w_in, w_gate, w_out, activation=activation)
+        return y.reshape(-1, d)
+    parts = []
+    for e in range(E):
+        if offs[e + 1] == offs[e]:
+            continue
+        xe = x[offs[e]:offs[e + 1]][None]
+        wg = w_gate[e:e + 1] if w_gate is not None else None
+        parts.append(grouped_ffn(xe, w_in[e:e + 1], wg, w_out[e:e + 1],
+                                 activation=activation)[0])
+    return jnp.concatenate(parts, axis=0)
+
+
 def grouped_ffn_chunk(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
                       row_align: int = 128):
     """Chunk-granular grouped FFN for the pipelined dispatch path.
@@ -41,8 +81,6 @@ def grouped_ffn_chunk(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
     every chunk GEMM on the fast aligned path instead of falling into a
     ragged tail block per chunk.
     """
-    import jax.numpy as jnp
-
     E, C, d = x.shape
     pad = (-C) % row_align
     if pad:

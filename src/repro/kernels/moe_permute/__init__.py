@@ -1,0 +1,18 @@
+"""Sort-based token permutation kernels for the MoE dispatch hot path.
+
+``permute`` gathers token rows into the (stage, destination, expert)-sorted
+capacity buffers the staged all-to-all transports; ``unpermute`` inverts the
+permutation on combine with the gate-weight multiply fused in.  Both have a
+Pallas TPU kernel (kernel.py) and a pure-jnp reference (ref.py) selected by
+ops.py per backend / ``use_pallas`` flag.
+"""
+
+from repro.kernels.moe_permute.ops import (    # noqa: F401
+    permute,
+    unpermute,
+    use_pallas_default,
+)
+from repro.kernels.moe_permute.ref import (    # noqa: F401
+    permute_ref,
+    unpermute_ref,
+)

@@ -1,0 +1,86 @@
+"""Pallas token-permutation kernels (TPU scalar-prefetch row movers).
+
+Both kernels are pure data movement: the slot/pick index vectors are
+scalar-prefetched into SMEM so every grid step's BlockSpec index map can
+address its source row *before* the body runs, turning the gather into a
+pipelined chain of single-row DMAs — no [T, N, C] one-hot einsum, no
+per-slot ``jnp.take`` scatter/gather HLOs in the dispatch hot path.
+
+``permute``   grid (S,):     out[s] = x[slot_to_token[s]]
+``unpermute`` grid (T, K):   out[t] = sum_k inv_w[t, k] * y[inv_idx[t, k]]
+              (K is the last, sequential grid axis, so the [1, d] output
+              block stays resident in VMEM and accumulates across picks —
+              the gate-weight multiply is fused into the accumulation)
+
+Sentinel convention (shared with ref.py): inputs arrive with one trailing
+all-zero row; index == row-count selects it.  ops.py appends that row.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _permute_kernel(idx_ref, x_ref, o_ref):
+    del idx_ref  # consumed by the BlockSpec index map
+    o_ref[0] = x_ref[0]
+
+
+def permute_pallas(x_padded, slot_to_token, *, interpret: bool = False):
+    """x_padded: [T + 1, d] (last row zeros); slot_to_token: [S] int32 in
+    [0, T].  Returns [S, d] rows in sorted capacity-slot order."""
+    S = slot_to_token.shape[0]
+    d = x_padded.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, d), lambda s, idx_ref: (idx_ref[s], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda s, idx_ref: (s, 0)),
+    )
+    return pl.pallas_call(
+        _permute_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, d), x_padded.dtype),
+        interpret=interpret,
+    )(slot_to_token, x_padded)
+
+
+def _unpermute_kernel(idx_ref, w_ref, y_ref, o_ref):
+    del idx_ref  # consumed by the BlockSpec index map
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+    part = y_ref[0].astype(jnp.float32) * w_ref[t, k]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[0] += part
+
+
+def unpermute_pallas(y_padded, inv_idx, inv_w, *, interpret: bool = False):
+    """y_padded: [S + 1, d] (last row zeros); inv_idx: [T, K] int32 in
+    [0, S]; inv_w: [T, K] float32.  Returns [T, d] float32 combined
+    outputs (cast at the caller)."""
+    T, K = inv_idx.shape
+    d = y_padded.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # inv_idx, inv_w live in SMEM
+        grid=(T, K),                 # K last => sequential accumulation
+        in_specs=[pl.BlockSpec((1, d),
+                               lambda t, k, idx_ref, w_ref: (idx_ref[t, k],
+                                                             0))],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda t, k, idx_ref, w_ref: (t, 0)),
+    )
+    return pl.pallas_call(
+        _unpermute_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=interpret,
+    )(inv_idx, inv_w.astype(jnp.float32), y_padded)

@@ -1,0 +1,130 @@
+"""Public permute/unpermute entry points with backend + autodiff policy.
+
+Implementation selection, given the engine-level ``use_pallas`` flag
+(``None`` = auto):
+
+* auto resolves to Pallas on accelerators (TPU/GPU) and the jnp reference
+  elsewhere; ``REPRO_KERNEL_INTERPRET=1`` forces the Pallas bodies through
+  the interpreter so CPU-only CI still executes them.
+* On TPU the kernels compile through Mosaic.  On GPU the scalar-prefetch
+  grid spec has no Triton lowering, so the reference path (whose XLA
+  gather is already a fused kernel on GPU) is used even when the flag is
+  on; on CPU a Pallas request runs ``interpret=True``.
+
+Both Pallas entries carry a ``custom_vjp`` whose backward pass is plain
+jnp scatter/gather — the permutation is its own (weighted) inverse — so
+training works identically whichever implementation the forward picked,
+and gate-weight gradients flow through the fused combine multiply.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.moe_permute import kernel
+from repro.kernels.moe_permute.ref import (_with_zero_row, permute_ref,
+                                           unpermute_ref)
+
+
+def use_pallas_default() -> bool:
+    """The engine's auto policy: Pallas on accelerators, ref elsewhere."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def _want_pallas(use_pallas) -> bool:
+    if use_pallas is None:
+        return (use_pallas_default()
+                or os.environ.get("REPRO_KERNEL_INTERPRET") == "1")
+    return bool(use_pallas)
+
+
+def _pallas_viable() -> bool:
+    # TPU: compiled Mosaic kernel.  CPU: interpreter (CI lane).  GPU: no
+    # Mosaic/Triton lowering for scalar-prefetch grids -> use the ref.
+    return jax.default_backend() in ("tpu", "cpu")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _float0(a):
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+# --- permute ---------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _permute_pallas(x, slot_to_token, interpret):
+    return kernel.permute_pallas(_with_zero_row(x), slot_to_token,
+                                 interpret=interpret)
+
+
+def _permute_fwd(x, slot_to_token, interpret):
+    return _permute_pallas(x, slot_to_token, interpret), \
+        (x.shape[0], slot_to_token)
+
+
+def _permute_bwd(interpret, res, g):
+    T, slot_to_token = res
+    # inverse of a gather is a scatter-add; sentinel slots (index == T) are
+    # out of bounds and dropped
+    gx = jnp.zeros((T, g.shape[-1]), g.dtype)
+    gx = gx.at[slot_to_token].add(g, mode="drop")
+    return gx, _float0(slot_to_token)
+
+
+_permute_pallas.defvjp(_permute_fwd, _permute_bwd)
+
+
+def permute(x, slot_to_token, *, use_pallas=None):
+    """[T, d] tokens -> [S, d] sorted capacity-slot rows (see ref.py for
+    the sentinel convention)."""
+    if _want_pallas(use_pallas) and _pallas_viable():
+        return _permute_pallas(x, slot_to_token, _interpret())
+    return permute_ref(x, slot_to_token)
+
+
+# --- unpermute -------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _unpermute_pallas(y, inv_idx, inv_w, interpret):
+    return kernel.unpermute_pallas(_with_zero_row(y), inv_idx, inv_w,
+                                   interpret=interpret)
+
+
+def _unpermute_fwd(y, inv_idx, inv_w, interpret):
+    return _unpermute_pallas(y, inv_idx, inv_w, interpret), (y, inv_idx,
+                                                             inv_w)
+
+
+def _unpermute_bwd(interpret, res, g):
+    y, inv_idx, inv_w = res
+    S, d = y.shape
+    g = g.astype(jnp.float32)                                   # [T, d]
+    # gy[s] = sum over picks mapping to slot s of w * g[token]
+    contrib = (g[:, None, :] * inv_w[..., None].astype(jnp.float32))
+    gy = jnp.zeros((S, d), jnp.float32)
+    gy = gy.at[inv_idx.reshape(-1)].add(contrib.reshape(-1, d), mode="drop")
+    # gw[t, k] = <g[t], y[inv_idx[t, k]]>
+    picked = jnp.take(_with_zero_row(y), inv_idx, axis=0).astype(jnp.float32)
+    gw = jnp.sum(g[:, None, :] * picked, axis=-1).astype(inv_w.dtype)
+    return gy.astype(y.dtype), _float0(inv_idx), gw
+
+
+_unpermute_pallas.defvjp(_unpermute_fwd, _unpermute_bwd)
+
+
+def unpermute(y, inv_idx, inv_w, *, use_pallas=None):
+    """[S, d] slot rows -> [T, d] float32 combined tokens, gate-weight
+    multiply fused (see ref.py for the sentinel convention)."""
+    if _want_pallas(use_pallas) and _pallas_viable():
+        return _unpermute_pallas(y, inv_idx, inv_w, _interpret())
+    return unpermute_ref(y, inv_idx, inv_w)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the token permutation pair.
+
+Sentinel convention (shared with kernel.py): an index equal to the source
+row count addresses an implicit all-zero row — dropped / padded capacity
+slots point at it on the way in, dropped gate picks point at it on the way
+out — so neither direction needs a separate validity mask.
+"""
+
+import jax.numpy as jnp
+
+
+def _with_zero_row(x):
+    """Append the sentinel zero row: [R, d] -> [R + 1, d]."""
+    return jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+
+
+def permute_ref(x, slot_to_token):
+    """Gather tokens into sorted capacity-slot order.
+
+    x: [T, d] local tokens; slot_to_token: [S] int32 in [0, T] where T is
+    the sentinel for empty slots.  Returns [S, d]: row ``s`` holds
+    ``x[slot_to_token[s]]`` (zeros for sentinel slots).
+    """
+    return jnp.take(_with_zero_row(x), slot_to_token, axis=0)
+
+
+def unpermute_ref(y, inv_idx, inv_w):
+    """Invert the permutation with the combine-weight multiply fused in.
+
+    y: [S, d] expert outputs in slot order; inv_idx: [T, K] int32 in
+    [0, S] (S = sentinel for dropped picks); inv_w: [T, K] combine weights
+    (0 for dropped picks).  Returns [T, d]:
+    ``out[t] = sum_k inv_w[t, k] * y[inv_idx[t, k]]`` in float32.
+    """
+    g = jnp.take(_with_zero_row(y), inv_idx, axis=0).astype(jnp.float32)
+    return jnp.sum(g * inv_w[..., None].astype(jnp.float32), axis=1)

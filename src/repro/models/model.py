@@ -117,7 +117,8 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
               dispatch: str = "a2a",
               a2a_num_chunks: int = 0,
               dispatch_override: tuple = (),
-              measured_comm: bool = False) -> transformer.ModelCtx:
+              measured_comm: bool = False,
+              use_pallas=None) -> transformer.ModelCtx:
     from repro.core import dispatch as dispatch_lib
 
     # arch-level per-layer overrides are the base; explicit (run-level)
@@ -148,7 +149,7 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
         remat=remat, decode_replicated=decode_replicated,
         use_flash=use_flash, use_moe_kernel=use_moe_kernel,
         dispatch=dispatch, a2a_num_chunks=num_chunks,
-        dispatch_override=dispatch_override)
+        dispatch_override=dispatch_override, use_pallas=use_pallas)
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,9 @@ class ModelCtx:
     # pairs.  Overrides on scanned group layers force the group loop to
     # unroll (the schedule becomes layer-dependent, so the HLO does too).
     dispatch_override: tuple = ()
+    # moe_permute token-permutation kernels in the dispatch hot path:
+    # None = auto (Pallas on TPU/GPU, jnp reference elsewhere)
+    use_pallas: Optional[bool] = None
     # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
     use_blockwise: bool = False                  # flash-style attention HLO
     fused_xent: bool = False                     # vocab-sharded xent
@@ -279,7 +282,8 @@ def _moe_block(p, x, ctx: ModelCtx, decode: bool, layer_idx=None):
     eng = dispatch_lib.make_engine(
         name, cfg=cfg, ep=ep, gate_cfg=gate_cfg, plan=ctx.plan,
         num_chunks=max(1, ctx.a2a_num_chunks),
-        tokens_replicated=replicated and decode)
+        tokens_replicated=replicated and decode,
+        use_pallas=ctx.use_pallas)
 
     def body(p_local, x_local):
         y, metrics = eng(p_local, x_local.reshape(-1, d))

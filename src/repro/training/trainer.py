@@ -121,7 +121,8 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
                               aux_mode=aux_mode, remat=run.remat,
                               dispatch=run.dispatch,
                               a2a_num_chunks=run.a2a_num_chunks,
-                              dispatch_override=run.dispatch_override)
+                              dispatch_override=run.dispatch_override,
+                              use_pallas=run.use_pallas)
     rules = model_lib.default_rules(mesh)
     key = jax.random.PRNGKey(run.seed)
     with mesh, sharding.axis_rules(rules):

@@ -122,15 +122,19 @@ def test_uniform_metrics_schema(key, mesh11, name):
 
 @pytest.mark.parametrize("name", ("a2a", "a2a_pipelined", "gather"))
 @pytest.mark.parametrize("shared", (0, 1))
-def test_cross_path_equivalence_vs_einsum_oracle(key, mesh11, name, shared):
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_cross_path_equivalence_vs_einsum_oracle(key, mesh11, name, shared,
+                                                 use_pallas):
     """Each selection-based path == the einsum oracle at matched ample
-    capacity (einsum capacity=T keeps every token, cf=8 does for a2a)."""
+    capacity (einsum capacity=T keeps every token, cf=8 does for a2a),
+    with the moe_permute Pallas kernels both off (jnp reference) and
+    forced on (Pallas interpreter on CPU)."""
     cfg, ep, gate_cfg, params, plan = _setup(key, shared=shared)
     x = jax.random.normal(jax.random.PRNGKey(2), (T, D), jnp.float32)
     y_oracle, _ = _apply("einsum", mesh11, params, x, cfg, ep, gate_cfg,
                          capacity=T)
     y, _ = _apply(name, mesh11, params, x, cfg, ep, gate_cfg,
-                  plan=plan, num_chunks=3)
+                  plan=plan, num_chunks=3, use_pallas=use_pallas)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
                                atol=1e-4, rtol=1e-3)
 
