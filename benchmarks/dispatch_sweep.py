@@ -18,6 +18,7 @@ spikes across all rows, which is what lets ``benchmarks.compare``'s
 machine-normalization cancel them.
 """
 
+import functools
 import time
 
 import jax
@@ -28,8 +29,16 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from repro.core import dispatch as dispatch_lib, gating
 from repro.core.capacity import make_plan
+from repro.kernels.moe_gemm import ops as gemm_ops
 
 PATHS = ("a2a", "a2a_pipelined", "gather", "einsum")
+
+# gemm_occupancy microbench: the occupancy-aware ragged grouped FFN at
+# 25/50/100% capacity utilization.  Shapes are chosen so per-block MXU work
+# dominates the Pallas interpreter's unconditional per-step block copies —
+# otherwise the block-skip saving drowns on CPU CI.
+GEMM_E, GEMM_C, GEMM_D, GEMM_F, GEMM_BC = 4, 512, 128, 512, 128
+GEMM_OCCS = (25, 50, 100)
 
 
 def _modes():
@@ -99,6 +108,42 @@ def run(quick: bool = False):
     configs.append(("anchor_matmul", jax.jit(
         lambda p, xx, _a=ma: (_a @ _a) @ _a)))
 
+    # gemm_occupancy rows: the ragged grouped FFN at partial capacity
+    # utilization.  "off" is the dense-FLOPs jnp reference (occupancy
+    # cannot change its cost); "kernel" forces the Pallas entry — compiled
+    # on TPU, interpreted on CPU — where row blocks past the realized count
+    # are skipped, so the 25% row must come in under the 100% row.
+    E_g, C_g, d_g, f_g = GEMM_E, GEMM_C, GEMM_D, GEMM_F
+    g_offs = tuple(C_g * e for e in range(E_g + 1))
+    g_exps = tuple(range(E_g))
+    kg = jax.random.split(jax.random.PRNGKey(11), 4)
+    g_x = jax.random.normal(kg[0], (E_g * C_g, d_g), jnp.float32)
+    g_wi = jax.random.normal(kg[1], (E_g, d_g, f_g), jnp.float32) * 0.1
+    g_wg = jax.random.normal(kg[2], (E_g, d_g, f_g), jnp.float32) * 0.1
+    g_wo = jax.random.normal(kg[3], (E_g, f_g, d_g), jnp.float32) * 0.1
+    gemm_rows = {}
+    for occ in GEMM_OCCS:
+        nrows = C_g * occ // 100
+        # zero-slot convention: rows past the realized count hold zeros,
+        # exactly as the permute sentinel delivers them
+        g_xo = jnp.where(
+            jnp.arange(E_g * C_g)[:, None] % C_g < nrows, g_x, 0.0)
+        valid = jnp.full((E_g,), nrows, jnp.int32)
+        # the dense reference burns full-capacity FLOPs whatever the
+        # occupancy, so a single "off" contrast row (at 100%) suffices —
+        # duplicating it per occupancy only adds noisy gate rows
+        modes = [("kernel", True)] if gemm_ops.use_ragged(True) else []
+        if occ == 100:
+            modes.append(("off", False))
+        for mode, flag in modes:
+            label = f"gemm_occupancy-{occ:03d}_pallas-{mode}"
+            gemm_rows[label] = (occ, mode, nrows * E_g)
+            configs.append((label, jax.jit(functools.partial(
+                lambda p, xx, _x, _v, _f: gemm_ops.grouped_ffn_ragged(
+                    _x, g_offs, g_exps, _v, g_wi, g_wg, g_wo,
+                    block_c=GEMM_BC, use_pallas=_f),
+                _x=g_xo, _v=valid, _f=flag))))
+
     print(f"# dispatch sweep: T={T} d={D} E={N} k={K} "
           f"backend={jax.default_backend()} "
           f"({rounds} interleaved rounds x {iters} iters, min)")
@@ -111,8 +156,10 @@ def run(quick: bool = False):
             for label, fn in configs:
                 # anchors set the compare gate's machine-speed scale, so
                 # their min must converge hardest: oversample them (they
-                # are also the cheapest rows)
-                reps = 4 if label.startswith("anchor") else 1
+                # are also the cheapest rows); the big-GEMM occupancy rows
+                # get 2x so their min shakes off contention spikes
+                reps = 4 if label.startswith("anchor") \
+                    else 2 if label.startswith("gemm_occupancy") else 1
                 for _ in range(reps):
                     t0 = time.perf_counter()
                     for _ in range(iters):
@@ -122,13 +169,39 @@ def run(quick: bool = False):
                         (time.perf_counter() - t0) / iters * 1e6)
 
     rows = []
-    print(f"{'config':>28s}{'us/call':>10s}")
+    print(f"{'config':>34s}{'us/call':>10s}{'  realized':>12s}")
     for label, _ in configs:
         us = float(min(samples[label]))
-        print(f"{label:>28s}{us:10.1f}")
-        rows.append((f"dispatch_{label}", us,
-                     f"T={T};d={D};E={N};k={K};"
-                     f"backend={jax.default_backend()}"))
+        if label in gemm_rows:
+            occ, mode, realized = gemm_rows[label]
+            derived = (f"E={GEMM_E};C={GEMM_C};d={GEMM_D};f={GEMM_F};"
+                       f"rows={realized}/{GEMM_E * GEMM_C};occ={occ}%;"
+                       f"backend={jax.default_backend()}")
+            print(f"{label:>34s}{us:10.1f}"
+                  f"{realized:>6d}/{GEMM_E * GEMM_C}")
+        else:
+            derived = (f"T={T};d={D};E={N};k={K};"
+                       f"backend={jax.default_backend()}")
+            print(f"{label:>34s}{us:10.1f}")
+        rows.append((f"dispatch_{label}", us, derived))
+
+    # occupancy must buy wall-clock on the kernel path: at 25% utilization
+    # three of four row blocks per expert are skipped by the pl.when
+    # predicate, so the 25% row has to land measurably under the 100% row
+    # (the "off" reference column burns dense FLOPs either way and is the
+    # contrast).  Raising here turns into a dispatch_FAILED row in run.py,
+    # which fails the compare gate.
+    k25 = "gemm_occupancy-025_pallas-kernel"
+    k100 = "gemm_occupancy-100_pallas-kernel"
+    if k25 in samples and jax.default_backend() == "cpu":
+        t25, t100 = min(samples[k25]), min(samples[k100])
+        print(f"# gemm occupancy 25%/100% kernel-path ratio: "
+              f"{t25 / t100:.3f}")
+        if t25 > 0.92 * t100:
+            raise RuntimeError(
+                f"25%-occupancy ragged GEMM not measurably faster than "
+                f"100% on the kernel path ({t25:.0f}us vs {t100:.0f}us): "
+                "the block-skip predicate is not buying wall-clock")
 
     # cross-check while we are here: step-time rows are only comparable if
     # the paths still agree (guards against benchmarking a broken kernel).

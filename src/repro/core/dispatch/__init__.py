@@ -48,5 +48,6 @@ from repro.core.dispatch.transport import (     # noqa: F401
     Stage,
     expert_segments,
     plan_stages,
+    stage_segments,
     wire_a2a,
 )

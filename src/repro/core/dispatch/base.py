@@ -204,33 +204,64 @@ def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
 
 
 def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
-                    *, chunk_granular: bool = False):
+                    *, seg_experts=None, rows_valid=None,
+                    chunk_granular: bool = False, use_pallas=None):
     """Segment-offset grouped expert FFN on a flat [R, d] row buffer.
 
-    ``seg_offsets`` is the static [E_local + 1] offset vector of the
-    contiguous expert spans the moe_permute dispatch delivers (see
-    ``moe_gemm.ops.grouped_ffn_segments``).  Semantics match
-    :func:`expert_ffn` on the segment-reshaped view — same kernel routing,
-    same model-axis psum — the entry just takes the sorted flat layout the
-    permutation kernels emit, so the engine never re-boxes rows.
+    ``seg_offsets`` is the static offset vector of the contiguous sorted
+    spans the moe_permute dispatch delivers; ``seg_experts`` names each
+    segment's expert (default: one segment per expert, in order) and
+    ``rows_valid`` optionally carries the *runtime* realized-row count per
+    segment — the occupancy view of TA-MoE's capacity slack.  Semantics
+    match :func:`expert_ffn` on the segment-reshaped view — same model-axis
+    psum, same zero-slot convention (callers keep rows past the valid count
+    zero-filled; outputs there are zero either way, computed-from-zeros or
+    skipped).
+
+    Backend routing: with the Pallas kernels active for ``use_pallas``
+    (``moe_gemm.ops.use_ragged``) every call goes through the
+    occupancy-aware ragged entry, so FLOPs scale with delivered tokens;
+    otherwise equal fully-occupied per-expert spans reshape onto the dense
+    einsum / ``cfg.use_kernel`` path exactly as before, and any genuinely
+    ragged static layout falls back to the ragged jnp reference.
     """
+    from repro.kernels.moe_gemm import ops as moe_gemm_ops
     offs = tuple(int(o) for o in seg_offsets)
-    if cfg.use_kernel:
-        from repro.kernels.moe_gemm import ops as moe_gemm_ops
+    d = x_flat.shape[-1]
+    if moe_gemm_ops.use_ragged(use_pallas) or cfg.use_kernel:
         y = moe_gemm_ops.grouped_ffn_segments(
             x_flat, offs, params["w_in"], params.get("w_gate"),
             params["w_out"], activation=cfg.activation,
-            row_align=128 if chunk_granular else 1)
+            row_align=128 if chunk_granular else 1,
+            seg_experts=seg_experts, rows_valid=rows_valid,
+            use_pallas=use_pallas)
     else:
-        E = len(offs) - 1
-        widths = {offs[e + 1] - offs[e] for e in range(E)}
-        assert len(widths) == 1, (
-            f"ragged segments {offs} need cfg.use_kernel; static capacity "
-            "plans always produce equal expert spans")
-        xg = x_flat.reshape(E, offs[1] - offs[0], x_flat.shape[-1])
-        h = _act(cfg, xg, params)
-        y = jnp.einsum("ecf,efd->ecd", h, params["w_out"]).reshape(
-            -1, x_flat.shape[-1])
+        # jnp path: collapse the (contiguous, expert-major) segments to
+        # per-expert spans — zero-filled slack rows make the dense compute
+        # equal to the masked one, so occupancy info is simply dropped here
+        if seg_experts is None:
+            per_expert = offs
+        else:
+            assert tuple(seg_experts) == tuple(sorted(seg_experts)), \
+                "segments must be expert-major for the jnp path"
+            E = params["w_in"].shape[0]
+            per_expert = [0] * (E + 1)
+            for s, e in enumerate(seg_experts):
+                per_expert[e + 1] = offs[s + 1]
+            for e in range(E):                 # experts with no segments
+                per_expert[e + 1] = max(per_expert[e + 1], per_expert[e])
+            per_expert = tuple(per_expert)
+        E = len(per_expert) - 1
+        widths = {per_expert[e + 1] - per_expert[e] for e in range(E)}
+        if len(widths) == 1:
+            xg = x_flat.reshape(E, per_expert[1] - per_expert[0], d)
+            h = _act(cfg, xg, params)
+            y = jnp.einsum("ecf,efd->ecd", h, params["w_out"]).reshape(-1, d)
+        else:
+            y = moe_gemm_ops.grouped_ffn_ragged(
+                x_flat, per_expert, tuple(range(E)), None,
+                params["w_in"], params.get("w_gate"), params["w_out"],
+                activation=cfg.activation, use_pallas=False)
     if ep.model_axis is not None:
         y = jax.lax.psum(y, ep.model_axis)
     return y

@@ -43,6 +43,7 @@ from repro.core.dispatch import routing, schedule, transport
 from repro.core.dispatch.base import (EPSpec, MoEConfig, expert_ffn,
                                       expert_ffn_flat, shared_ffn)
 from repro.core.dispatch.routing import _prod
+from repro.kernels.moe_gemm import ops as moe_gemm_ops
 from repro.kernels.moe_permute import ops as permute_ops
 
 #: Uniform metrics schema every path resolves to.  ``frac_by_level`` is a
@@ -176,6 +177,17 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     combine weights are identical across chunk counts, so outputs are
     allclose at matched capacities (the per-token accumulation order over
     chunks may differ in the last ulp).
+
+    Occupancy: when the Pallas GEMM is active (``moe_gemm.ops.use_ragged``)
+    the runtime per-(destination, expert) valid-row counts that
+    ``routing.build_indices`` derives ride along each chunk's payload
+    (``A2ATransport.dispatch_counts`` — a tiny exact all_to_all of the
+    count vector), and the expert compute goes through the occupancy-aware
+    ragged grouped GEMM: row blocks past a segment's delivered tokens do
+    zero MXU work, so FLOPs track Eq. (7)'s *realized* skewed load instead
+    of the static worst-case capacity.  Numerically this changes nothing —
+    the skipped rows are the permute sentinel's zero-filled slack, whose
+    FFN output is zero either way.
     """
     cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
     T, d = x.shape
@@ -206,23 +218,47 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
               for stage, sel, cap_axis, cpc, _ in work),
         topk_idx, T) for j in range(num_chunks)]
 
+    # occupancy-aware compute: only pay for the count exchange when the
+    # ragged Pallas entry will actually consume it
+    ragged = moe_gemm_ops.use_ragged(eng.use_pallas)
+
     def dispatch(j):
         di = indices[j]
         flat = permute_ops.permute(x, di.slot_to_token,
                                    use_pallas=eng.use_pallas)      # [S_j, d]
-        parts = []
+        parts, cnts = [], None
         for (stage, *_), (_, off, shape) in zip(work, di.stage_spans()):
             buf = jax.lax.slice_in_dim(flat, off, off + _prod(shape), axis=0)
             parts.append(tr.dispatch(buf.reshape(shape + (d,)), stage))
-        return parts[0] if len(parts) == 1 \
-            else jnp.concatenate(parts, axis=1)
+        if ragged:
+            cnts = tuple(
+                tr.dispatch_counts(
+                    jax.lax.slice_in_dim(di.rows_per_expert, off,
+                                         off + _prod(shape),
+                                         axis=0).reshape(shape), stage)
+                for (stage, *_), (_, off, shape) in zip(work,
+                                                        di.expert_spans()))
+        xin = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        return xin, cnts
 
-    def compute(j, xin):
+    def compute(j, v):
         # contiguous expert spans -> the segment-offset grouped GEMM entry
+        xin, cnts = v
         E_l, R, _ = xin.shape
-        segs = transport.expert_segments(E_l, R)
+        if cnts is None:
+            segs, exps, valid = transport.expert_segments(E_l, R), None, None
+        else:
+            # one segment per (expert, stage, source): the granularity at
+            # which delivered rows are a valid prefix
+            segs, exps = transport.stage_segments(
+                E_l, tuple((stage.num_dests, cpc)
+                           for stage, _, _, cpc, _ in work))
+            valid = jnp.concatenate(cnts, axis=1).reshape(-1) \
+                if len(cnts) > 1 else cnts[0].reshape(-1)
         y = expert_ffn_flat(params, xin.reshape(E_l * R, d), segs, cfg, ep,
-                            chunk_granular=chunked)
+                            seg_experts=exps, rows_valid=valid,
+                            chunk_granular=chunked,
+                            use_pallas=eng.use_pallas)
         return y.reshape(E_l, R, d)
 
     def combine(out, j, y_exp):
@@ -305,10 +341,23 @@ def _gather_path(params, x, eng: DispatchEngine):
     aux = gating.aux_loss(gate_out, gate_cfg, levels)
 
     xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)                # [E_l, Tg, d]
-    y = expert_ffn(params, xin, cfg, ep)                         # [E_l, Tg, d]
+    Tg, d = xg.shape
+    if moe_gemm_ops.use_ragged(eng.use_pallas):
+        # occupancy-aware decode grid: the dense [E_l, Tg] buffer computes
+        # every (expert, token) pair, but the combine only ever reads slots
+        # the gate picked — an expert picked by *no* gathered token is pure
+        # slack, so its whole Tg-row segment is skipped by the ragged GEMM
+        picked = routing.gather_weights(gate_out, my_rank, E_l) > 0  # [Tg,E_l]
+        valid = jnp.where(jnp.any(picked, axis=0), Tg, 0).astype(jnp.int32)
+        y = expert_ffn_flat(params, xin.reshape(E_l * Tg, d),
+                            transport.expert_segments(E_l, Tg), cfg, ep,
+                            seg_experts=tuple(range(E_l)), rows_valid=valid,
+                            use_pallas=eng.use_pallas)
+        y = y.reshape(E_l, Tg, d)
+    else:
+        y = expert_ffn(params, xin, cfg, ep)                     # [E_l, Tg, d]
     # combine through the same weighted inverse-permutation the staged
     # paths use: the dense [E_l, Tg] grid is a degenerate slot buffer
-    Tg = xg.shape[0]
     inv_idx, inv_w = routing.gather_inverse(gate_out, my_rank, E_l, Tg)
     y = permute_ops.unpermute(y.reshape(E_l * Tg, -1), inv_idx, inv_w,
                               use_pallas=eng.use_pallas)         # [Tg, d]

@@ -218,12 +218,22 @@ class DispatchIndices(NamedTuple):
     dropped or lives outside this selection set, e.g. another pipeline
     chunk).  ``shapes`` are the static per-stage ``idx`` shapes, in stage
     order, for carving stage buffers back out of the flat [S, d] payload.
+
+    ``rows_per_expert`` is the *runtime* occupancy view of the same buffer:
+    one int32 valid-row count per (stage, destination..., expert) capacity
+    segment, flattened in slot order.  Valid slots are a prefix of every
+    segment (top-k sorts live weights first; padding appends empties), so
+    the count fully describes which rows of a segment hold delivered
+    tokens — this is what the occupancy-aware ragged grouped GEMM consumes
+    after the transport forwards the counts to the receiving rank
+    (``A2ATransport.dispatch_counts``).
     """
     slot_to_token: jnp.ndarray    # [S] int32, sentinel T
     slot_w: jnp.ndarray           # [S] f32, 0 for empty slots
     inv_idx: jnp.ndarray          # [T, K] int32, sentinel S
     inv_w: jnp.ndarray            # [T, K] f32, 0 for dropped picks
     shapes: tuple                 # ((stage_idx, idx_shape), ...)
+    rows_per_expert: Optional[jnp.ndarray] = None   # [num segments] int32
 
     @property
     def num_slots(self) -> int:
@@ -236,6 +246,16 @@ class DispatchIndices(NamedTuple):
             n = _prod(shape)
             spans.append((s, off, shape))
             off += n
+        return tuple(spans)
+
+    def expert_spans(self) -> tuple:
+        """Static (stage_idx, start, shape) spans of ``rows_per_expert`` —
+        ``shape`` is the per-stage count tensor shape [*dests, E_local]
+        (the ``idx`` shape minus its capacity axis)."""
+        spans, off = [], 0
+        for s, shape in self.shapes:
+            spans.append((s, off, shape[:-1]))
+            off += _prod(shape[:-1])
         return tuple(spans)
 
 
@@ -251,7 +271,8 @@ def build_indices(sels, topk_idx, num_tokens: int) -> DispatchIndices:
     exactly one stage and appears in one top-``cap`` row there — so the
     inverse is a plain scatter with no collisions.
     """
-    parts_tok, parts_w, parts_valid, parts_eid, shapes = [], [], [], [], []
+    parts_tok, parts_w, parts_valid, parts_eid = [], [], [], []
+    shapes, parts_cnt = [], []
     for s, sel in sels:
         assert sel.eid is not None, "build_indices needs Selection.eid"
         shapes.append((s, tuple(sel.idx.shape)))
@@ -259,6 +280,10 @@ def build_indices(sels, topk_idx, num_tokens: int) -> DispatchIndices:
         parts_w.append(sel.w.reshape(-1))
         parts_valid.append(sel.valid.reshape(-1))
         parts_eid.append(sel.eid.reshape(-1))
+        # per-(destination, expert) valid-row count: valid slots are a
+        # prefix of the capacity axis (top-k descending, pads appended)
+        parts_cnt.append(jnp.sum(sel.valid > 0, axis=-1,
+                                 dtype=jnp.int32).reshape(-1))
 
     def _cat(parts):
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
@@ -281,7 +306,8 @@ def build_indices(sels, topk_idx, num_tokens: int) -> DispatchIndices:
         jnp.arange(S, dtype=jnp.int32), mode="drop")
     inv_w = jnp.zeros((num_tokens, K), jnp.float32)
     inv_w = inv_w.at[t_scatter, k_of_slot].set(w, mode="drop")
-    return DispatchIndices(slot_to_token, w, inv_idx, inv_w, tuple(shapes))
+    return DispatchIndices(slot_to_token, w, inv_idx, inv_w, tuple(shapes),
+                           _cat(parts_cnt))
 
 
 def gather_inverse(gate_out, my_rank, experts_per_rank: int,

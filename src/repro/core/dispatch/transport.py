@@ -107,6 +107,23 @@ def expert_segments(num_experts: int, rows_per_expert: int) -> tuple:
     return tuple(rows_per_expert * e for e in range(num_experts + 1))
 
 
+def stage_segments(num_experts: int, stage_widths) -> tuple:
+    """Fine-grained ``(seg_offsets, seg_experts)`` of a delivered buffer
+    concatenated over stages: flat row order is (expert, stage,
+    destination, capacity-slot) and ``stage_widths`` is the static
+    ``((num_dests, rows_per_dest), ...)`` stage list.  One segment per
+    (expert, stage, source destination) — the granularity at which the
+    delivered rows are a valid prefix, and therefore the granularity the
+    occupancy-aware ragged GEMM masks at."""
+    offs, exps = [0], []
+    for e in range(num_experts):
+        for num_dests, width in stage_widths:
+            for _ in range(num_dests):
+                offs.append(offs[-1] + width)
+                exps.append(e)
+    return tuple(offs), tuple(exps)
+
+
 @dataclasses.dataclass(frozen=True)
 class A2ATransport:
     """Equal-split staged all-to-all over the EP mesh axes."""
@@ -124,6 +141,23 @@ class A2ATransport:
         E_l, C, d = buf.shape[k:]
         perm = (k,) + tuple(range(k)) + (k + 1, k + 2)
         return buf.transpose(perm).reshape(E_l, stage.num_dests * C, d)
+
+    def dispatch_counts(self, cnt, stage: Stage):
+        """[*sizes, E_l] per-(destination, expert) valid-row counts ->
+        [E_l, num_dests] per-(expert, source) counts at the receiver.
+
+        Runs the *same* all_to_all chain and transpose as :meth:`dispatch`
+        (minus the trailing [C, d] payload dims and the wire-dtype cast —
+        counts travel exact), so entry ``[e, g]`` describes exactly the
+        ``g``-th capacity chunk of expert ``e``'s delivered rows.  This is
+        the tiny metadata exchange that lets the occupancy-aware grouped
+        GEMM size its compute by realized tokens."""
+        k = len(stage.axis_names)
+        for i, ax in enumerate(stage.axis_names):
+            cnt = jax.lax.all_to_all(cnt, ax, split_axis=i, concat_axis=i,
+                                     tiled=True)
+        perm = (k,) + tuple(range(k))
+        return cnt.transpose(perm).reshape(cnt.shape[k], stage.num_dests)
 
     def combine(self, y, stage: Stage):
         """[E_l, prod(sizes)*C, d] expert outputs -> [*sizes, E_l, C, d]

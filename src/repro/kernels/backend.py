@@ -1,0 +1,43 @@
+"""Shared Pallas backend policy for the kernel packages.
+
+One policy, two consumers (``moe_permute``, ``moe_gemm``) — keeping it in a
+single module means the permute and GEMM layers of the same engine call can
+never drift onto different backends:
+
+* ``want_pallas(None)`` (auto) resolves to the Pallas kernels on
+  accelerators (TPU/GPU) and the jnp references elsewhere;
+  ``REPRO_KERNEL_INTERPRET=1`` additionally flips the auto default on, so
+  CPU-only CI executes the kernel bodies under the interpreter.
+* ``pallas_viable()``: TPU compiles through Mosaic; CPU runs
+  ``interpret=True``; GPU has no Mosaic/Triton lowering for the
+  scalar-prefetch grids these kernels use, so the reference path is used
+  even when the flag is on.
+* ``interpret_mode()``: everything that is not a real TPU interprets.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def want_pallas(use_pallas=None) -> bool:
+    if use_pallas is None:
+        return (jax.default_backend() in ("tpu", "gpu")
+                or os.environ.get("REPRO_KERNEL_INTERPRET") == "1")
+    return bool(use_pallas)
+
+
+def pallas_viable() -> bool:
+    return jax.default_backend() in ("tpu", "cpu")
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def float0(a):
+    """Symbolic-zero cotangent for integer operands of a custom_vjp."""
+    return np.zeros(a.shape, jax.dtypes.float0)

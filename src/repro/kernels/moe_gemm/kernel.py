@@ -1,12 +1,39 @@
-"""Pallas grouped expert-FFN GEMM.
+"""Pallas grouped expert-FFN GEMMs: dense (equal-capacity) and ragged
+(occupancy-aware).
 
-Computes, per expert e:   y[e] = act(x[e] @ w_in[e] [, x[e] @ w_gate[e]]) @ w_out[e]
+Dense entry — computes, per expert e:
+
+    y[e] = act(x[e] @ w_in[e] [, x[e] @ w_gate[e]]) @ w_out[e]
 
 TPU mapping: grid (E, C/bc, F/bf); the f axis is the last (sequential) grid
-dimension so the output block [bc, d] stays resident in VMEM and accumulates
-partial products across f blocks.  Block shapes keep the working set
+dimension so the f32 accumulator block [bc, d] stays resident in a VMEM
+scratch across f blocks and is cast back to the model dtype once, in the
+epilogue of the last f block.  Block shapes keep the working set
 (x: bc*d, w_in/w_gate: d*bf, w_out: bf*d, acc: bc*d f32) inside ~16 MB VMEM
 with MXU-aligned (multiple-of-128) matmul dims.
+
+Ragged entry — the occupancy-aware variant behind TA-MoE's skewed Eq. (7)
+capacity plans: the flat [R, d] row buffer is pre-sorted into contiguous
+per-(expert) segments whose *capacity* is static but whose *realized* row
+count is a runtime value (delivered tokens vs planned slack).  The grid is
+(row-block, f-block) over a static block decomposition of the segments;
+three scalar-prefetch vectors in SMEM drive it MegaBlocks-style:
+
+    block_row[b]     row-block index of block ``b`` in the flat buffer
+                     (BlockSpec index map: the DMA source/dest address)
+    block_eid[b]     expert whose weights block ``b`` multiplies
+    block_nvalid[b]  runtime valid-row count of block ``b`` (0..bc)
+
+``pl.when(block_nvalid[b] > 0)`` gates the whole MXU body, so row blocks
+past a segment's realized rows issue **zero matmuls** and emit exact zero
+rows; partially-filled blocks compute and mask rows past the count.  The
+shapes (grid, buffers) stay fully static for jit — only the FLOPs are
+data-dependent, at row-block granularity.
+
+Both entries carry a ``custom_vjp`` with a pure-jnp backward (mirroring
+``kernels/moe_permute``) so training runs the Pallas forward without
+falling into Pallas autodiff; the dense backward lives here, the ragged
+backward in ops.py next to the segment structure it needs.
 """
 
 from __future__ import annotations
@@ -16,13 +43,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref
 
 
-def _ffn_kernel(x_ref, win_ref, wgate_ref, wout_ref, y_ref, *,
-                activation: str, nf: int):
-    j = pl.program_id(2)  # f-block index (sequential)
-
-    x = x_ref[0]                       # [bc, d]
+def _ffn_body(x, win_ref, wgate_ref, wout_ref, *, activation: str):
+    """One (row-block, f-block) partial product, f32 [bc, d]."""
     win = win_ref[0]                   # [d, bf]
     wout = wout_ref[0]                 # [bf, d]
     h = jnp.dot(x, win, preferred_element_type=jnp.float32)
@@ -31,37 +58,41 @@ def _ffn_kernel(x_ref, win_ref, wgate_ref, wout_ref, y_ref, *,
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
-    part = jnp.dot(h.astype(x.dtype), wout,
-                   preferred_element_type=jnp.float32)
+    return jnp.dot(h.astype(x.dtype), wout, preferred_element_type=jnp.float32)
+
+
+def _ffn_kernel(x_ref, win_ref, wgate_ref, wout_ref, y_ref, acc_ref, *,
+                activation: str):
+    j = pl.program_id(2)               # f-block index (sequential)
+    nf = pl.num_programs(2)
+    part = _ffn_body(x_ref[0], win_ref, wgate_ref, wout_ref,
+                     activation=activation)
 
     @pl.when(j == 0)
     def _init():
-        y_ref[0] = part
+        acc_ref[...] = part
 
     @pl.when(j > 0)
     def _acc():
-        y_ref[0] += part
+        acc_ref[...] += part
+
+    @pl.when(j == nf - 1)
+    def _epilogue():
+        # cast the resident f32 accumulator back once, inside the kernel —
+        # no whole-array astype over [E, C, d] on the outside
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
 
 
-def grouped_ffn_pallas(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
-                       block_c: int = 128, block_f: int = 256,
-                       interpret: bool = False):
-    """x: [E, C, d]; w_in/w_gate: [E, d, f]; w_out: [E, f, d] -> [E, C, d]."""
+def _grouped_ffn_call(x, w_in, w_gate, w_out, activation, block_c, block_f,
+                      interpret):
     E, C, d = x.shape
     f = w_in.shape[-1]
     bc = min(block_c, C)
     bf = min(block_f, f)
     nc = pl.cdiv(C, bc)
     nf = pl.cdiv(f, bf)
-
-    swiglu = activation == "swiglu" and w_gate is not None
-    if not swiglu:
-        w_gate = w_in  # placeholder operand, unused by the gelu path
-
-    kernel = functools.partial(_ffn_kernel,
-                               activation="swiglu" if swiglu else "gelu",
-                               nf=nf)
-    out = pl.pallas_call(
+    kernel = functools.partial(_ffn_kernel, activation=activation)
+    return pl.pallas_call(
         kernel,
         grid=(E, nc, nf),
         in_specs=[
@@ -71,7 +102,124 @@ def grouped_ffn_pallas(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
             pl.BlockSpec((1, bf, d), lambda e, i, j: (e, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((E, C, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
         interpret=interpret,
     )(x, w_in, w_gate, w_out)
-    return out.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _grouped_ffn_pallas(x, w_in, w_gate, w_out, activation, block_c, block_f,
+                        interpret):
+    return _grouped_ffn_call(x, w_in, w_gate, w_out, activation, block_c,
+                             block_f, interpret)
+
+
+def _grouped_ffn_fwd(x, w_in, w_gate, w_out, activation, block_c, block_f,
+                     interpret):
+    y = _grouped_ffn_pallas(x, w_in, w_gate, w_out, activation, block_c,
+                            block_f, interpret)
+    return y, (x, w_in, w_gate, w_out)
+
+
+def _grouped_ffn_bwd(activation, block_c, block_f, interpret, res, g):
+    x, w_in, w_gate, w_out = res
+
+    def f(x_, wi_, wg_, wo_):
+        return grouped_ffn_ref(x_, wi_, wg_ if activation == "swiglu"
+                               else None, wo_, activation=activation)
+
+    _, vjp = jax.vjp(f, x, w_in, w_gate, w_out)
+    return vjp(g.astype(x.dtype))
+
+
+_grouped_ffn_pallas.defvjp(_grouped_ffn_fwd, _grouped_ffn_bwd)
+
+
+def grouped_ffn_pallas(x, w_in, w_gate, w_out, *, activation: str = "swiglu",
+                       block_c: int = 128, block_f: int = 256,
+                       interpret: bool = False):
+    """x: [E, C, d]; w_in/w_gate: [E, d, f]; w_out: [E, f, d] -> [E, C, d]."""
+    swiglu = activation == "swiglu" and w_gate is not None
+    if not swiglu:
+        w_gate = w_in  # placeholder operand, unused (and un-grad-ed) by gelu
+    return _grouped_ffn_pallas(x, w_in, w_gate, w_out,
+                               "swiglu" if swiglu else "gelu",
+                               block_c, block_f, interpret)
+
+
+# ---------------------------------------------------------------------------
+# occupancy-aware ragged entry
+# ---------------------------------------------------------------------------
+
+
+def _ragged_ffn_kernel(row_ref, eid_ref, nvalid_ref, x_ref, win_ref,
+                       wgate_ref, wout_ref, y_ref, acc_ref, *,
+                       activation: str):
+    b = pl.program_id(0)               # row-block index (scalar-prefetched)
+    j = pl.program_id(1)               # f-block index (sequential)
+    nf = pl.num_programs(1)
+    nv = nvalid_ref[b]                 # runtime valid rows of this block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the occupancy predicate: a row block past its segment's realized row
+    # count does zero MXU work — the whole FFN body is skipped
+    @pl.when(nv > 0)
+    def _compute():
+        part = _ffn_body(x_ref[...], win_ref, wgate_ref, wout_ref,
+                         activation=activation)
+        rows = jax.lax.broadcasted_iota(jnp.int32, part.shape, 0)
+        acc_ref[...] += jnp.where(rows < nv, part, 0.0)
+
+    @pl.when(j == nf - 1)
+    def _epilogue():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def grouped_ffn_ragged_pallas(x, block_row, block_eid, block_nvalid, w_in,
+                              w_gate, w_out, *, activation: str = "swiglu",
+                              block_c: int, block_f: int = 256,
+                              interpret: bool = False):
+    """Occupancy-aware grouped FFN over a flat, segment-sorted row buffer.
+
+    x: [R, d] flat rows; ``block_row``/``block_eid``/``block_nvalid`` are the
+    [NB] scalar-prefetch vectors of a static block decomposition (see
+    ``ops.plan_blocks``): block ``b`` covers rows
+    ``block_row[b]*block_c : +block_c`` of ``x``, multiplies expert
+    ``block_eid[b]``'s weights, and holds ``block_nvalid[b]`` (runtime)
+    valid rows.  Rows past the valid count come back as exact zeros.
+    ``block_c`` must divide every segment width (ops picks it that way), so
+    no block straddles two experts.
+    """
+    R, d = x.shape
+    f = w_in.shape[-1]
+    bc = block_c
+    bf = min(block_f, f)
+    nb = block_row.shape[0]
+    nf = pl.cdiv(f, bf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nb, nf),
+        in_specs=[
+            pl.BlockSpec((bc, d), lambda b, j, row, eid, nv: (row[b], 0)),
+            pl.BlockSpec((1, d, bf),
+                         lambda b, j, row, eid, nv: (eid[b], 0, j)),
+            pl.BlockSpec((1, d, bf),
+                         lambda b, j, row, eid, nv: (eid[b], 0, j)),
+            pl.BlockSpec((1, bf, d),
+                         lambda b, j, row, eid, nv: (eid[b], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, d),
+                               lambda b, j, row, eid, nv: (row[b], 0)),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+    )
+    kernel = functools.partial(_ragged_ffn_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(block_row, block_eid, block_nvalid, x, w_in, w_gate, w_out)

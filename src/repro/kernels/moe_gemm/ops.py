@@ -1,18 +1,61 @@
-"""Jitted public wrapper: picks the Pallas kernel on TPU, interpret-mode
-Pallas under REPRO_KERNEL_INTERPRET=1 (CPU validation), jnp oracle otherwise."""
+"""Public grouped-FFN entry points with backend + autodiff policy.
+
+Implementation selection is the shared ``repro.kernels.backend`` policy
+(same module ``kernels/moe_permute`` resolves through, so the permute and
+GEMM layers of one engine call can never drift apart): ``None`` / auto
+resolves to the Pallas kernels on TPU, the jnp references elsewhere;
+``REPRO_KERNEL_INTERPRET=1`` flips the auto default onto interpreted
+kernels so CPU-only CI executes the kernel bodies; ``True``/``False``
+force it (``True`` on CPU interprets, GPU always takes the reference —
+no Triton lowering for scalar-prefetch grids).
+
+Entries:
+
+* :func:`grouped_ffn` — dense [E, C, d] equal-capacity grouped FFN.
+* :func:`grouped_ffn_chunk` — dense with row padding to an MXU multiple
+  (pipelined-dispatch chunk slices).
+* :func:`grouped_ffn_ragged` — the occupancy-aware entry: a flat [R, d]
+  buffer of static contiguous segments with *runtime* per-segment
+  valid-row counts; row blocks past a segment's realized rows do zero MXU
+  work and emit zero rows (see ``plan_blocks`` for the static block
+  decomposition the scalar-prefetch grid consumes).
+* :func:`grouped_ffn_segments` — the segment-offset compat surface the
+  dispatch engine historically called: equal spans reshape onto the dense
+  entry when the kernels are off; any ragged layout (and every kernel-on
+  call) routes through :func:`grouped_ffn_ragged` — the old per-segment
+  Python-loop fallback is gone.
+
+Both Pallas forwards carry a ``custom_vjp`` with a jnp backward (the
+ragged one lives here, next to the segment structure it closes over), so
+training never falls into Pallas autodiff for the GEMM.
+"""
 
 import functools
-import os
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.moe_gemm.kernel import grouped_ffn_pallas
-from repro.kernels.moe_gemm.ref import grouped_ffn_ref
+from repro.kernels.backend import (float0 as _float0,
+                                   interpret_mode as _interpret,
+                                   pallas_viable as _pallas_viable,
+                                   want_pallas as _want_pallas)
+from repro.kernels.moe_gemm import kernel
+from repro.kernels.moe_gemm.ref import (grouped_ffn_ragged_ref,
+                                        grouped_ffn_ref,
+                                        segment_relayout_maps)
 
 
-def _backend() -> str:
-    return jax.default_backend()
+def use_ragged(use_pallas=None) -> bool:
+    """Whether the occupancy-aware Pallas entry is active for this flag.
+
+    The dispatch engine keys the whole occupancy machinery (valid-count
+    exchange, ragged compute) off this: when False the engine runs the
+    legacy dense path untouched — no extra collectives on backends where
+    the kernel would not run anyway.
+    """
+    return _want_pallas(use_pallas) and _pallas_viable()
 
 
 @functools.partial(jax.jit, static_argnames=("activation",))
@@ -21,36 +64,178 @@ def _ref_jit(x, w_in, w_gate, w_out, activation="swiglu"):
 
 
 def grouped_ffn(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
-    if _backend() == "tpu":
-        return grouped_ffn_pallas(x, w_in, w_gate, w_out,
-                                  activation=activation)
-    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
-        return grouped_ffn_pallas(x, w_in, w_gate, w_out,
-                                  activation=activation, interpret=True)
+    if _want_pallas(None) and _pallas_viable():
+        return kernel.grouped_ffn_pallas(x, w_in, w_gate, w_out,
+                                         activation=activation,
+                                         interpret=_interpret())
     return _ref_jit(x, w_in, w_gate, w_out, activation)
 
 
+# ---------------------------------------------------------------------------
+# occupancy-aware ragged entry
+# ---------------------------------------------------------------------------
+
+
+def plan_blocks(seg_offsets, seg_experts, block_c: int = 128):
+    """Static block decomposition of a segment layout.
+
+    Picks the largest row-block size ``bc <= block_c`` that divides every
+    non-empty segment width — so no block ever straddles two segments and
+    no padding/repacking of the flat buffer is needed (static capacity
+    plans are MXU-aligned by construction; tiny test plans just get small
+    blocks).  Returns ``(bc, block_row, block_eid, block_seg, block_loc)``
+    numpy vectors: block ``b`` covers flat rows ``block_row[b]*bc : +bc``,
+    multiplies expert ``block_eid[b]``, and starts ``block_loc[b]`` rows
+    into segment ``block_seg[b]``.
+    """
+    offs = tuple(int(o) for o in seg_offsets)
+    widths = [offs[s + 1] - offs[s] for s in range(len(offs) - 1)]
+    g = 0
+    for w in widths:
+        g = math.gcd(g, w)
+    bc = 1
+    for cand in range(min(g, int(block_c)), 0, -1):
+        if g % cand == 0:
+            bc = cand
+            break
+    rows, eids, segs, locs = [], [], [], []
+    for s, (e, w) in enumerate(zip(seg_experts, widths)):
+        for i in range(w // bc):
+            rows.append(offs[s] // bc + i)
+            eids.append(int(e))
+            segs.append(s)
+            locs.append(i * bc)
+    return (bc, np.asarray(rows, np.int32), np.asarray(eids, np.int32),
+            np.asarray(segs, np.int32), np.asarray(locs, np.int32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ragged_pallas(static, x, rows_valid, w_in, w_gate, w_out):
+    seg_offsets, seg_experts, activation, block_c, block_f, interpret = static
+    bc, brow, beid, bseg, bloc = plan_blocks(seg_offsets, seg_experts,
+                                             block_c)
+    nvalid = jnp.clip(jnp.take(jnp.asarray(rows_valid, jnp.int32),
+                               jnp.asarray(bseg)) - jnp.asarray(bloc),
+                      0, bc).astype(jnp.int32)
+    return kernel.grouped_ffn_ragged_pallas(
+        x, jnp.asarray(brow), jnp.asarray(beid), nvalid, w_in, w_gate,
+        w_out, activation=activation, block_c=bc, block_f=block_f,
+        interpret=interpret)
+
+
+def _ragged_fwd(static, x, rows_valid, w_in, w_gate, w_out):
+    y = _ragged_pallas(static, x, rows_valid, w_in, w_gate, w_out)
+    return y, (x, rows_valid, w_in, w_gate, w_out)
+
+
+def _ragged_bwd(static, res, g):
+    seg_offsets, seg_experts, activation, *_ = static
+    x, rows_valid, w_in, w_gate, w_out = res
+
+    def f(x_, wi_, wg_, wo_):
+        return grouped_ffn_ragged_ref(
+            x_, seg_offsets, seg_experts, rows_valid, wi_,
+            wg_ if activation == "swiglu" else None, wo_,
+            activation=activation)
+
+    _, vjp = jax.vjp(f, x, w_in, w_gate, w_out)
+    gx, gwi, gwg, gwo = vjp(g.astype(x.dtype))
+    return gx, _float0(rows_valid), gwi, gwg, gwo
+
+
+_ragged_pallas.defvjp(_ragged_fwd, _ragged_bwd)
+
+
+def grouped_ffn_ragged(x, seg_offsets, seg_experts, rows_valid, w_in, w_gate,
+                       w_out, *, activation: str = "swiglu",
+                       block_c: int = 128, block_f: int = 256,
+                       row_align: int = 1, use_pallas=None):
+    """Occupancy-aware grouped FFN over a flat [R, d] segment-sorted buffer.
+
+    ``seg_offsets`` (static [S + 1]) and ``seg_experts`` (static [S]) give
+    each contiguous segment's rows and expert; ``rows_valid`` (runtime [S]
+    int32, or None = fully occupied) its realized row count.  The contract
+    is the zero-slot convention shared with ``moe_permute``: callers keep
+    rows at or past the valid count zero-filled (the permute sentinel does
+    this for free), and the entry returns exact zeros there — on the kernel
+    path whole row blocks past the count are skipped, so FLOPs track
+    delivered tokens instead of planned capacity.
+
+    ``row_align > 1`` (the pipelined dispatch passes the MXU systolic
+    width) keeps the kernel path on MXU-friendly row blocks even when the
+    segment widths are chunk slices with no nice divisor: segments are
+    padded up to a multiple of ``min(row_align, block_c)`` through a
+    batched gather before the kernel and carved back after — the padded
+    rows sit past ``rows_valid``, so they are skipped/masked slack, exactly
+    like capacity slack (this replaces what ``grouped_ffn_chunk`` did for
+    the dense path).
+    """
+    offs = tuple(int(o) for o in seg_offsets)
+    exps = tuple(int(e) for e in seg_experts)
+    R = x.shape[0]
+    assert len(offs) == len(exps) + 1 and offs[0] == 0 \
+        and offs[-1] == R, (offs, len(exps), x.shape)
+    if R == 0:
+        return x
+    swiglu = activation == "swiglu" and w_gate is not None
+    widths = [offs[s + 1] - offs[s] for s in range(len(exps))]
+    if rows_valid is None:
+        rows_valid = jnp.asarray(widths, jnp.int32)
+    if not use_ragged(use_pallas):
+        return grouped_ffn_ragged_ref(x, offs, exps, rows_valid, w_in,
+                                      w_gate if swiglu else None, w_out,
+                                      activation=activation)
+
+    wg = w_gate if swiglu else w_in   # placeholder, un-grad-ed by gelu
+    align = max(1, min(int(row_align), int(block_c)))
+    unaligned = align > 1 and any(w % align for w in widths)
+    if unaligned:
+        pw = np.asarray([-(-w // align) * align for w in widths], np.int64)
+        poffs = np.concatenate([[0], np.cumsum(pw)])
+        gather, carve = segment_relayout_maps(offs, poffs)
+        xz = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+        xp = jnp.take(xz, jnp.asarray(gather), axis=0)   # sentinel -> zeros
+        offs = tuple(int(o) for o in poffs)
+    else:
+        xp = x
+    static = (offs, exps, "swiglu" if swiglu else "gelu",
+              int(block_c), int(block_f), _interpret())
+    y = _ragged_pallas(static, xp, rows_valid, w_in, wg, w_out)
+    if unaligned:
+        y = jnp.take(y, jnp.asarray(carve), axis=0)
+    return y
+
+
 def grouped_ffn_segments(x, seg_offsets, w_in, w_gate, w_out, *,
-                         activation: str = "swiglu", row_align: int = 1):
+                         activation: str = "swiglu", row_align: int = 1,
+                         seg_experts=None, rows_valid=None, use_pallas=None):
     """Segment-offset grouped FFN over a flat [R, d] row buffer.
 
-    ``seg_offsets`` is a static, monotone [E + 1] offset vector: expert
-    ``e`` owns rows ``seg_offsets[e]:seg_offsets[e + 1]``.  This is the
-    layout the moe_permute dispatch emits — contiguous expert spans, in
-    (stage, destination, expert) sort order per expert — so the equal-width
-    case (every static capacity plan) reshapes straight onto the blocked
-    ``grouped_ffn`` with zero data movement; ragged offsets fall back to
-    per-segment calls.  ``row_align > 1`` routes equal segments through the
-    row-padding chunk entry (pipelined dispatch slices are usually not
-    MXU-tile multiples).
+    ``seg_offsets`` is a static, monotone offset vector: segment ``s`` owns
+    rows ``seg_offsets[s]:seg_offsets[s + 1]`` and multiplies expert
+    ``seg_experts[s]`` (default: one segment per expert, in order).  This
+    is the layout the moe_permute dispatch emits — contiguous sorted spans
+    — so when the kernels are off and every span is equal and fully
+    occupied, the buffer reshapes straight onto the dense ``grouped_ffn``
+    with zero data movement (``row_align > 1`` routes through the
+    row-padding chunk entry for pipelined slices).  Everything else —
+    ragged static widths, runtime ``rows_valid`` occupancy, or the kernels
+    on — goes through the occupancy-aware :func:`grouped_ffn_ragged`
+    entry; there is no per-segment loop fallback any more.
     """
     offs = tuple(int(o) for o in seg_offsets)
     E = w_in.shape[0]
-    assert len(offs) == E + 1 and offs[0] == 0 and offs[-1] == x.shape[0], \
-        (offs, E, x.shape)
-    widths = [offs[e + 1] - offs[e] for e in range(E)]
+    if seg_experts is None:
+        assert len(offs) == E + 1, (offs, E)
+        seg_experts = tuple(range(E))
+    assert offs[0] == 0 and offs[-1] == x.shape[0], (offs, x.shape)
+    widths = [offs[s + 1] - offs[s] for s in range(len(seg_experts))]
     d = x.shape[-1]
-    if len(set(widths)) == 1:
+    dense = (rows_valid is None and len(set(widths)) == 1
+             and len(widths) == E
+             and tuple(seg_experts) == tuple(range(E))
+             and not use_ragged(use_pallas))
+    if dense:
         xg = x.reshape(E, widths[0], d)
         if row_align > 1:
             y = grouped_ffn_chunk(xg, w_in, w_gate, w_out,
@@ -58,15 +243,9 @@ def grouped_ffn_segments(x, seg_offsets, w_in, w_gate, w_out, *,
         else:
             y = grouped_ffn(xg, w_in, w_gate, w_out, activation=activation)
         return y.reshape(-1, d)
-    parts = []
-    for e in range(E):
-        if offs[e + 1] == offs[e]:
-            continue
-        xe = x[offs[e]:offs[e + 1]][None]
-        wg = w_gate[e:e + 1] if w_gate is not None else None
-        parts.append(grouped_ffn(xe, w_in[e:e + 1], wg, w_out[e:e + 1],
-                                 activation=activation)[0])
-    return jnp.concatenate(parts, axis=0)
+    return grouped_ffn_ragged(x, offs, seg_experts, rows_valid, w_in, w_gate,
+                              w_out, activation=activation,
+                              row_align=row_align, use_pallas=use_pallas)
 
 
 def grouped_ffn_chunk(x, w_in, w_gate, w_out, *, activation: str = "swiglu",

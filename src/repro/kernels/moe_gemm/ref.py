@@ -1,7 +1,8 @@
-"""Pure-jnp oracle for the grouped expert FFN."""
+"""Pure-jnp oracles for the grouped expert FFN (dense and ragged)."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def grouped_ffn_ref(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
@@ -16,3 +17,92 @@ def grouped_ffn_ref(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
     y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype).astype(jnp.float32),
                    w_out.astype(jnp.float32))
     return y.astype(x.dtype)
+
+
+def segment_relayout_maps(src_offsets, dst_offsets):
+    """Static index maps for re-laying flat segment rows into a padded
+    segment layout (all numpy, built at trace time).
+
+    ``src_offsets`` / ``dst_offsets`` are [S + 1] offset vectors of the
+    same S segments in the source and destination (padded) flat buffers;
+    every destination width must be >= its source width.  Returns
+    ``(gather, carve)``: ``gather[p]`` is the source row of destination
+    row ``p`` — the sentinel ``R`` (= one-past-the-end, callers append a
+    zero row) for pad rows — and ``carve[r]`` is the destination position
+    of source row ``r``.  This is the one place the sentinel-gather /
+    searchsorted carve-back arithmetic lives; both the ragged reference
+    and the kernel path's ``row_align`` padding resolve through it.
+    """
+    src = np.asarray(src_offsets, np.int64)
+    dst = np.asarray(dst_offsets, np.int64)
+    R, Rp = int(src[-1]), int(dst[-1])
+    widths = src[1:] - src[:-1]
+    p = np.arange(Rp)
+    seg_p = np.searchsorted(dst[1:], p, side="right")
+    local = p - dst[seg_p]
+    gather = np.where(local < widths[seg_p], src[seg_p] + local, R)
+    r = np.arange(R)
+    seg_r = np.searchsorted(src[1:], r, side="right")
+    carve = dst[seg_r] + (r - src[seg_r])
+    return gather, carve
+
+
+def grouped_ffn_ragged_ref(x, seg_offsets, seg_experts, rows_valid, w_in,
+                           w_gate, w_out, *, activation: str = "swiglu"):
+    """Oracle for the occupancy-aware ragged entry.
+
+    ``x`` is a flat [R, d] buffer of static, contiguous segments: segment
+    ``s`` owns rows ``seg_offsets[s]:seg_offsets[s + 1]`` and multiplies
+    expert ``seg_experts[s]``'s weights.  ``rows_valid`` (runtime [S] int32,
+    or None for fully occupied) caps each segment's realized rows: rows at
+    or past the count are masked on input and forced to exact zero on
+    output — the zero-slot convention the kernel shares.
+
+    Implementation: one batched gather lifts the flat buffer onto a
+    [S, cmax, d] equal-width view (row-index matrix built in numpy at trace
+    time — no per-segment Python ops in the graph), the dense einsums run
+    with per-segment gathered weights, and a second gather carves the flat
+    layout back out.  Differentiable (the masks zero invalid-row
+    gradients), so this is also the ``custom_vjp`` backward of the Pallas
+    forward.
+    """
+    offs = np.asarray([int(o) for o in seg_offsets], np.int64)
+    exps = tuple(int(e) for e in seg_experts)
+    S = len(exps)
+    R = x.shape[0]
+    assert offs.shape[0] == S + 1 and offs[0] == 0 and offs[-1] == R, \
+        (offs, S, x.shape)
+    widths = offs[1:] - offs[:-1]
+    if not S or R == 0:
+        return jnp.zeros_like(x)
+    cmax = int(widths.max())
+
+    row = np.arange(cmax)[None, :]                          # [1, cmax]
+    in_seg = row < widths[:, None]                          # [S, cmax] static
+    equal = bool((widths == cmax).all())
+    if equal:
+        # the engine's common case: equal segments view for free
+        xs = x.reshape(S, cmax, -1)
+    else:
+        gather, carve = segment_relayout_maps(
+            offs, np.arange(S + 1) * cmax)
+        xz = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+        xs = jnp.take(xz, jnp.asarray(gather.reshape(S, cmax)),
+                      axis=0)                               # [S, cmax, d]
+
+    if rows_valid is None:
+        mask = jnp.asarray(in_seg)
+    else:
+        mask = jnp.asarray(in_seg) & \
+            (jnp.asarray(row) < jnp.asarray(rows_valid, jnp.int32)[:, None])
+    xs = xs * mask[..., None].astype(xs.dtype)
+
+    eid = jnp.asarray(exps, jnp.int32)
+    wg = None if w_gate is None else jnp.take(w_gate, eid, axis=0)
+    ys = grouped_ffn_ref(xs, jnp.take(w_in, eid, axis=0), wg,
+                         jnp.take(w_out, eid, axis=0), activation=activation)
+    ys = ys * mask[..., None].astype(ys.dtype)
+    if equal:
+        return ys.reshape(R, -1)
+    # carve the flat layout back out: flat row offs[s] + l lives at [s, l]
+    return jnp.take(ys.reshape(S * cmax, -1), jnp.asarray(carve), axis=0)

@@ -20,12 +20,14 @@ and gate-weight gradients flow through the fused combine multiply.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.kernels.backend import (float0 as _float0,
+                                   interpret_mode as _interpret,
+                                   pallas_viable as _pallas_viable,
+                                   want_pallas as _want_pallas)
 from repro.kernels.moe_permute import kernel
 from repro.kernels.moe_permute.ref import (_with_zero_row, permute_ref,
                                            unpermute_ref)
@@ -34,27 +36,6 @@ from repro.kernels.moe_permute.ref import (_with_zero_row, permute_ref,
 def use_pallas_default() -> bool:
     """The engine's auto policy: Pallas on accelerators, ref elsewhere."""
     return jax.default_backend() in ("tpu", "gpu")
-
-
-def _want_pallas(use_pallas) -> bool:
-    if use_pallas is None:
-        return (use_pallas_default()
-                or os.environ.get("REPRO_KERNEL_INTERPRET") == "1")
-    return bool(use_pallas)
-
-
-def _pallas_viable() -> bool:
-    # TPU: compiled Mosaic kernel.  CPU: interpreter (CI lane).  GPU: no
-    # Mosaic/Triton lowering for scalar-prefetch grids -> use the ref.
-    return jax.default_backend() in ("tpu", "cpu")
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _float0(a):
-    return np.zeros(a.shape, jax.dtypes.float0)
 
 
 # --- permute ---------------------------------------------------------------

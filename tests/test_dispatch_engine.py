@@ -155,6 +155,85 @@ def test_cross_path_equivalence_decode_shapes(key, mesh11, name):
 
 
 # ---------------------------------------------------------------------------
+# occupancy-aware ragged grouped GEMM through the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ("a2a", "a2a_pipelined", "gather"))
+def test_ragged_gemm_entry_on_and_off_agree(key, mesh11, name):
+    """With the Pallas GEMM forced on, every selection path routes its
+    expert compute through the occupancy-aware ragged entry (runtime
+    valid-row counts, block-skip predicate) — outputs must equal both the
+    dense jnp path and the einsum oracle.  A tight capacity factor makes
+    the capacity buffers genuinely under-filled, so slack blocks really
+    are skipped rather than trivially full."""
+    from repro.kernels.moe_gemm import ops as gemm_ops
+    assert gemm_ops.use_ragged(True), "ragged entry must be viable here"
+    cfg, ep, gate_cfg, params, plan = _setup(key, capacity_factor=1.5)
+    x = jax.random.normal(jax.random.PRNGKey(5), (T, D), jnp.float32)
+    kw = dict(plan=plan) if name != "gather" else {}
+    if name == "a2a_pipelined":
+        kw["num_chunks"] = 3
+    y_off, m_off = _apply(name, mesh11, params, x, cfg, ep, gate_cfg,
+                          use_pallas=False, **kw)
+    y_on, m_on = _apply(name, mesh11, params, x, cfg, ep, gate_cfg,
+                        use_pallas=True, **kw)
+    np.testing.assert_allclose(np.asarray(y_on), np.asarray(y_off),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(m_on["dropped"]),
+                               float(m_off["dropped"]), atol=1e-6)
+
+
+def test_gather_ragged_skips_unpicked_experts(key, mesh11):
+    """Decode regime: at tiny token counts most local experts are picked by
+    no token at all — the ragged entry skips their whole segments and the
+    output still matches the dense gather compute."""
+    Td = 3
+    cfg, ep, gate_cfg, params, _ = _setup(key)
+    x = jax.random.normal(jax.random.PRNGKey(6), (Td, D), jnp.float32)
+    y_dense, _ = _apply("gather", mesh11, params, x, cfg, ep, gate_cfg,
+                        use_pallas=False)
+    y_ragged, _ = _apply("gather", mesh11, params, x, cfg, ep, gate_cfg,
+                         use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_ragged), np.asarray(y_dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rows_per_expert_counts_delivered_tokens(key, mesh11):
+    """DispatchIndices.rows_per_expert must sum to the number of kept
+    (token, pick) slots and bound every segment by its plan capacity."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.dispatch import routing
+    cfg, ep, gate_cfg, params, plan = _setup(key, capacity_factor=1.25)
+
+    def body(p, xx):
+        routed = routing.route(p, xx, cfg, ep, plan, gate_cfg,
+                               with_bufs=False)
+        di = routing.build_indices(routed.sels,
+                                   routed.gate_out["topk_idx"], T)
+        kept = sum(jnp.sum(sel.valid) for _, sel in routed.sels)
+        return di.rows_per_expert, di.slot_w, kept
+
+    x = jax.random.normal(jax.random.PRNGKey(7), (T, D), jnp.float32)
+    fn = shard_map(body, mesh=mesh11, in_specs=(P(), P()),
+                   out_specs=(P(), P(), P()), check_vma=False)
+    with mesh11:
+        counts, slot_w, kept = fn(params, x)
+    counts = np.asarray(counts)
+    assert counts.sum() == int(kept) == int((np.asarray(slot_w) > 0).sum())
+    # one segment per (stage, dest, expert); each bounded by its stage cap
+    off = 0
+    for s in range(plan.num_stages):
+        if plan.caps[s] <= 0:
+            continue
+        n_seg = N  # single-rank mesh: num_dests == 1, E_l == N
+        seg = counts[off:off + n_seg]
+        assert (seg <= min(plan.caps[s], T)).all()
+        off += n_seg
+    assert off == counts.shape[0]
+
+
+# ---------------------------------------------------------------------------
 # per-layer dispatch override through the model stack
 # ---------------------------------------------------------------------------
 
@@ -236,6 +315,67 @@ def test_build_ctx_merges_arch_and_run_overrides(mesh11):
 # ---------------------------------------------------------------------------
 # multipod mesh case (slow subprocess: forced host devices)
 # ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ragged_gemm_multipod_counts_align():
+    """4-rank EP at a *tight* capacity factor: the delivered-count exchange
+    (dispatch_counts) must line the runtime occupancy up with the payload
+    chunks — a misalignment would zero real token rows and break the
+    ragged-on == ragged-off equality that under-filled buffers expose."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import dispatch as dl, gating
+        from repro.core.capacity import make_plan
+
+        mesh = make_mesh((2, 2), ("pod", "data"))
+        D, F, N, K, T = 16, 32, 8, 2, 32
+        cfg = dl.MoEConfig(d_model=D, d_ff=F, num_experts=N, top_k=K,
+                           capacity_factor=2.0, dtype=jnp.float32)
+        ep = dl.EPSpec(num_pods=2, ep_per_pod=2, pod_axis="pod",
+                       data_axis="data", model_axis=None)
+        gate_cfg = gating.GateConfig(num_experts=N, top_k=K, aux_mode="ta")
+        params = dl.init_moe_params(jax.random.PRNGKey(0), cfg, ep, gate_cfg)
+        plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
+                         capacity_factor=2.0, num_pods=2, ep_per_pod=2,
+                         mode="ta", round_multiple=1)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4 * T, D), jnp.float32)
+        pspecs = {"gate": {"w": P()},
+                  "w_in": P(("pod", "data"), None, None),
+                  "w_gate": P(("pod", "data"), None, None),
+                  "w_out": P(("pod", "data"), None, None)}
+
+        def run(name, **kw):
+            eng = dl.make_engine(name, cfg=cfg, ep=ep, gate_cfg=gate_cfg,
+                                 **kw)
+            fn = shard_map(lambda p, xx: eng(p, xx)[0], mesh=mesh,
+                           in_specs=(pspecs, P(("pod", "data"), None)),
+                           out_specs=P(("pod", "data"), None),
+                           check_vma=False)
+            with mesh:
+                return np.asarray(fn(params, x))
+
+        y_off = run("a2a", plan=plan, use_pallas=False)
+        for name, kw in (("a2a", {}), ("a2a_pipelined", {"num_chunks": 2}),
+                         ("gather", {})):
+            pkw = dict(plan=plan) if name != "gather" else {}
+            y_on = run(name, use_pallas=True, **pkw, **kw)
+            ref = y_off if name != "gather" \
+                else run("gather", use_pallas=False)
+            err = float(np.abs(y_on - ref).max())
+            print(name, "ERR", err)
+            assert err < 1e-4, (name, err)
+        print("MULTIRANK-RAGGED-OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-4000:]}"
+    assert "MULTIRANK-RAGGED-OK" in r.stdout
 
 
 @pytest.mark.slow

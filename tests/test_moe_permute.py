@@ -159,9 +159,9 @@ def _route_as_rank0(plan, axis_sizes, T, N, K, seed=0):
                                with_bufs=False)
         di = routing.build_indices(routed.sels,
                                    routed.gate_out["topk_idx"], T)
-        return di[:4]
+        return di[:4] + (di.rows_per_expert,)
     fn = shard_map(body, mesh=mesh, in_specs=(P(), P()),
-                   out_specs=(P(), P(), P(), P()), check_vma=False)
+                   out_specs=(P(), P(), P(), P(), P()), check_vma=False)
     with mesh:
         out = fn(params, x)
     ep_stages = transport.plan_stages(plan, ep)
@@ -180,8 +180,8 @@ def test_segment_offsets_conserve_plan_caps(axis_sizes, seed, cf):
     plan = make_dispatch_plan(tokens_per_device=T, num_experts=N, top_k=K,
                               capacity_factor=cf, axis_sizes=axis_sizes,
                               mode="ta")
-    (s2t, slot_w, inv_idx, inv_w), stages, E_l = _route_as_rank0(
-        plan, axis_sizes, T, N, K, seed=seed)
+    (s2t, slot_w, inv_idx, inv_w, rows_per_expert), stages, E_l = \
+        _route_as_rank0(plan, axis_sizes, T, N, K, seed=seed)
     S = int(s2t.shape[0])
     # routing clamps each stage's capacity to the local token count
     want_spans = [st_.num_dests * E_l * min(st_.cap, T) for st_ in stages]
@@ -192,6 +192,17 @@ def test_segment_offsets_conserve_plan_caps(axis_sizes, seed, cf):
         assert st_.cap == plan.caps[st_.index] > 0
         off += span
     assert off == S
+    # the runtime occupancy view agrees with the slot weights: one count
+    # per (stage, destination, expert) segment, prefix-valid, summing to
+    # the kept slots and bounded by each stage's capacity
+    counts = np.asarray(rows_per_expert)
+    assert counts.shape[0] == sum(st_.num_dests * E_l for st_ in stages)
+    assert counts.sum() == int((np.asarray(slot_w) > 0).sum())
+    off = 0
+    for st_ in stages:
+        n_seg = st_.num_dests * E_l
+        assert (counts[off:off + n_seg] <= min(st_.cap, T)).all()
+        off += n_seg
     # weight conservation through inversion: every kept (token, pick) weight
     # appears exactly once on each side
     np.testing.assert_allclose(float(jnp.sum(slot_w)),
