@@ -56,7 +56,7 @@ def main() -> None:
     from benchmarks import (ablation_dispatch, dispatch_sweep,
                             fig3_convergence, fig4_throughput,
                             fig5_fastermoe, fig6_dispatch, fig_overlap,
-                            roofline, table1_comm)
+                            roofline, serving_sweep, table1_comm)
 
     suites = {
         "table1": lambda: table1_comm.run(),
@@ -68,6 +68,7 @@ def main() -> None:
         "ablation": lambda: ablation_dispatch.run(),
         "overlap": lambda: fig_overlap.run(),
         "dispatch": lambda: dispatch_sweep.run(quick=args.quick),
+        "serving": lambda: serving_sweep.run(quick=args.quick),
     }
     sel = args.only or list(suites)
     rows = []

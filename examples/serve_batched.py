@@ -1,57 +1,80 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-per-request cache state — the decode_32k path in miniature, including the
-gather-mode MoE decode (weights stationary, tokens psum-combined).
+"""Continuous-batching serving example: a queue of requests with mixed
+prompt and output lengths drains through a fixed pool of decode slots —
+admission packs prefill through the fused path, freed slots are reused
+without recompilation, and per-stream tokens/sec is reported at the end.
 
     PYTHONPATH=src python examples/serve_batched.py --arch deepseek_v2_lite_16b
+    PYTHONPATH=src python examples/serve_batched.py --arch internvl2_26b
+
+See docs/serving.md for the scheduler / slot / KV-cache API.
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import sharding
 from repro.compat import make_mesh
 from repro.configs.base import get_config
-from repro.models import model as model_lib
+from repro.models import model as model_lib, vlm
 from repro.serving import engine
+from repro.serving.scheduler import Request
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek_v2_lite_16b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--prefill-pack", type=int, default=2)
     ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
     arch = get_config(args.arch).reduced()
     print(f"serving {arch.name} ({arch.family}); "
-          f"batch={args.batch} cache={args.cache_len}")
+          f"slots={args.num_slots} pack={args.prefill_pack} "
+          f"cache={args.cache_len}")
 
     ctx = model_lib.build_ctx(arch, mesh, seq_len=args.cache_len,
-                              global_batch=args.batch, aux_mode="none")
+                              global_batch=args.num_slots, aux_mode="none")
     rules = model_lib.default_rules(mesh)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        new = int(rng.integers(2, 24))
+        fe = (vlm.make_patches(rng, 1, arch)[0]
+              if arch.frontend == "vision" else None)
+        reqs.append(Request(uid=uid,
+                            tokens=rng.integers(0, arch.vocab_size,
+                                                size=plen).tolist(),
+                            max_new_tokens=new,
+                            temperature=args.temperature,
+                            frontend=fe))
+
+    cfg = engine.ServeConfig(num_slots=args.num_slots,
+                             cache_len=args.cache_len,
+                             prefill_pack=args.prefill_pack,
+                             prompt_buckets=(24,))
     with mesh, sharding.axis_rules(rules):
         params = model_lib.init_params(jax.random.PRNGKey(0), ctx,
                                        rules=rules)
-        key = jax.random.PRNGKey(42)
-        prompts = jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, arch.vocab_size,
-            jnp.int32)
-        t0 = time.time()
-        res = engine.generate(params, ctx, prompts, steps=args.new_tokens,
-                              cache_len=args.cache_len, temperature=0.8,
-                              seed=7)
-        dt = time.time() - t0
-    total = args.batch * args.new_tokens
-    print(f"generated {total} tokens in {dt:.1f}s "
-          f"({total/dt:.1f} tok/s, {res.steps_per_sec:.1f} steps/s)")
-    for b in range(args.batch):
-        print(f"  req{b}: {res.tokens[b].tolist()}")
+        eng = engine.ServingEngine(params, ctx, cfg)
+        report = eng.run(reqs, seed=args.seed)
+
+    print(f"served {len(report.streams)} streams: "
+          f"{report.total_new_tokens} tokens in {report.wall_time:.1f}s "
+          f"({report.tokens_per_sec:.1f} tok/s aggregate, "
+          f"{report.decode_steps} decode steps, "
+          f"{report.prefill_calls} prefill packs)")
+    for s in report.streams:
+        print(f"  req{s.request.uid}: prompt={s.request.prompt_len:2d} "
+              f"new={len(s.generated):2d} "
+              f"{s.tokens_per_sec:6.1f} tok/s  {s.generated[:8]}")
 
 
 if __name__ == "__main__":

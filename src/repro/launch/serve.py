@@ -20,6 +20,10 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--streams", type=int, default=0,
+                    help="serve this many queued requests through the "
+                         "continuous-batching engine instead of one "
+                         "fixed-batch generate call")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -47,6 +51,27 @@ def main(argv=None):
     with mesh, sharding.axis_rules(rules):
         params = model_lib.init_params(jax.random.PRNGKey(0), ctx,
                                        rules=rules)
+        if args.streams:
+            import numpy as np
+            from repro.serving.scheduler import Request
+            rng = np.random.default_rng(1)
+            reqs = [Request(uid=i,
+                            tokens=rng.integers(
+                                0, arch.vocab_size,
+                                size=args.prompt_len).tolist(),
+                            max_new_tokens=args.steps,
+                            temperature=args.temperature)
+                    for i in range(args.streams)]
+            cfg = engine.ServeConfig(num_slots=args.batch,
+                                     cache_len=args.cache_len,
+                                     prefill_pack=min(args.batch, 4),
+                                     prompt_buckets=(args.prompt_len,))
+            report = engine.ServingEngine(params, ctx, cfg).run(reqs)
+            print(f"served {len(report.streams)} streams at "
+                  f"{report.tokens_per_sec:.2f} tok/s aggregate "
+                  f"({report.decode_steps} decode steps, "
+                  f"{report.prefill_calls} prefill packs)")
+            return 0
         key = jax.random.PRNGKey(1)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len),
                                      0, arch.vocab_size, jnp.int32)

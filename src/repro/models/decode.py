@@ -88,6 +88,68 @@ def fill_cross_cache(params, cache, enc_out, ctx: ModelCtx):
     return cache
 
 
+# ---------------------------------------------------------------------------
+# slot-indexed cache ops (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# The cache pytree has two batch layouts: top-level ``prefix{i}`` entries
+# carry the batch on axis 0, the stacked ``groups`` entry carries it on
+# axis 1 (axis 0 is the scanned layer-group axis).  The helpers below are
+# the only place that layout knowledge lives.
+
+
+def _map_batch_axis(cache, fn):
+    """Apply ``fn(leaf, batch_axis)`` across the cache pytree."""
+    out = {}
+    for k, v in cache.items():
+        axis = 1 if k == "groups" else 0
+        out[k] = jax.tree_util.tree_map(lambda leaf: fn(leaf, axis), v)
+    return out
+
+
+def cache_insert_slots(dst, src, slots):
+    """Write ``src`` (leading batch P) into ``dst`` (leading batch N) at
+    ``slots`` [P].  Slot ids >= N are dropped (JAX scatter out-of-bounds
+    semantics), which is how padded admission packs no-op: pad ``slots``
+    with N and the extra rows never land."""
+    def ins(d, s, axis):
+        idx = (slice(None),) * axis + (slots,)
+        return d.at[idx].set(s.astype(d.dtype))
+    out = {}
+    for k in dst:
+        axis = 1 if k == "groups" else 0
+        out[k] = jax.tree_util.tree_map(
+            lambda d, s: ins(d, s, axis), dst[k], src[k])
+    return out
+
+
+def cache_evict_slots(cache, slots):
+    """Zero every cache leaf at ``slots`` (pos included, so the slot reads
+    as empty).  Not required before re-insertion — ``cache_insert_slots``
+    overwrites a slot completely — but keeps freed slots inert and is the
+    eviction half of the serving API."""
+    def ev(leaf, axis):
+        idx = (slice(None),) * axis + (slots,)
+        return leaf.at[idx].set(jnp.zeros((), leaf.dtype))
+    return _map_batch_axis(cache, ev)
+
+
+def _select_batch(mask, new, old):
+    """Per-request select between two cache pytrees: ``mask`` [B] picks
+    ``new`` where True.  Used by the scan prefill to freeze a request's
+    cache once its (right-padded) prompt is exhausted."""
+    def sel(n, o, axis):
+        shape = [1] * n.ndim
+        shape[axis] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n, o)
+    out = {}
+    for k in new:
+        axis = 1 if k == "groups" else 0
+        out[k] = jax.tree_util.tree_map(
+            lambda n, o: sel(n, o, axis), new[k], old[k])
+    return out
+
+
 def _decode_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx, layer_idx=None):
     a = ctx.arch
     h = layers.norm_apply(p["norm1"], x, a.norm)
@@ -170,3 +232,170 @@ def decode_step(params, cache, tokens, ctx: ModelCtx):
     x = layers.norm_apply(params["final_norm"], x, a.norm)
     logits = layers.unembed_apply(params["embed"], x)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# fused prefill: full-sequence forward that materializes the decode cache
+# ---------------------------------------------------------------------------
+
+
+def _needs_scan_prefill(arch) -> bool:
+    """Recurrent mixers (mamba/xlstm) and cross-attention decoders carry
+    per-step state the full-sequence applies do not expose, so those
+    families prefill by scanning ``decode_step`` (still one fused XLA call,
+    just sequential over time)."""
+    prefix, group, _ = layer_plan(arch)
+    return any(sub.mixer not in ("attn", "mla") or sub.cross
+               for sub in list(prefix) + list(group))
+
+
+def _prefill_sublayer(p, c, x, sub: SubLayer, ctx: ModelCtx, lens,
+                      layer_idx=None):
+    """Full-sequence sublayer forward that also writes the decode cache:
+    K/V (attn) or the compressed latent entries (mla) for positions
+    [0, S), with ``pos`` set to each request's true prompt length so
+    right-padded rows are never attended."""
+    a = ctx.arch
+    S = x.shape[1]
+    h = layers.norm_apply(p["norm1"], x, a.norm)
+    if sub.mixer == "attn":
+        mix, (k, v) = layers.attn_apply(p["mixer"], h, ctx.attn_cfg)
+        c["mixer"] = {
+            "k": jnp.asarray(c["mixer"]["k"]).at[:, :S].set(
+                k.astype(c["mixer"]["k"].dtype)),
+            "v": jnp.asarray(c["mixer"]["v"]).at[:, :S].set(
+                v.astype(c["mixer"]["v"].dtype)),
+            "pos": lens,
+        }
+    elif sub.mixer == "mla":
+        mix, entry = mla_lib.mla_apply(p["mixer"], h, ctx.mla_cfg)
+        c["mixer"] = {
+            "c_kv": jnp.asarray(c["mixer"]["c_kv"]).at[:, :S].set(
+                entry["c_kv"].astype(c["mixer"]["c_kv"].dtype)),
+            "k_rope": jnp.asarray(c["mixer"]["k_rope"]).at[:, :S].set(
+                entry["k_rope"].astype(c["mixer"]["k_rope"].dtype)),
+            "pos": lens,
+        }
+    else:  # _needs_scan_prefill routes recurrent mixers away from here
+        raise ValueError(f"fused prefill cannot cache mixer {sub.mixer!r}")
+    x = x + mix
+    if sub.ffn == "mlp":
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        x = x + layers.mlp_apply(p["ffn"], h, a.activation)
+    elif sub.ffn == "moe":
+        # decode=True: the weights-stationary gather path computes every
+        # token independently (no capacity drops), so a packed prefill is
+        # exactly equivalent to prefilling each request alone — the
+        # property the continuous-batching tests pin.
+        h = layers.norm_apply(p["norm2"], x, a.norm)
+        y, _ = _moe_block(p["ffn"], h, ctx, decode=True, layer_idx=layer_idx)
+        x = x + y
+    return x, c
+
+
+def _prefill_by_scan(params, batch, cache, ctx: ModelCtx, lens):
+    """Prefill fallback for recurrent/cross families: one ``lax.scan`` of
+    ``decode_step`` over the prompt.  Per-request cache updates freeze once
+    t >= lens[b], so right padding cannot corrupt recurrent state."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    def body(carry, inp):
+        cache, last = carry
+        tok, t = inp
+        logits, new_cache = decode_step(params, cache, tok[:, None], ctx)
+        active = t < lens
+        cache = _select_batch(active, new_cache, cache)
+        last = jnp.where((t == lens - 1)[:, None], logits[:, 0], last)
+        return (cache, last), None
+
+    last0 = jnp.zeros((B, ctx.arch.vocab_size), jnp.float32)
+    (cache, last), _ = jax.lax.scan(
+        body, (cache, last0), (tokens.T, jnp.arange(S)))
+    return last, cache
+
+
+def prefill(params, batch, ctx: ModelCtx, *, cache_len: int, lens=None):
+    """Fused prefill: full-sequence forward over right-padded prompts that
+    materializes the decode cache in one pass.
+
+    batch: {"tokens": [B, S], optional "frontend"}; ``lens`` [B] gives each
+    request's true prompt length (default S).  Returns
+    ``(last_logits [B, V], cache)`` — the logits at each request's final
+    prompt position (the distribution of its first generated token) and a
+    cache of length ``cache_len`` with ``pos == lens``.
+
+    Attention/MLA families run the parallel forward and write K/V (or the
+    compressed latents) directly; recurrent and cross-attention families
+    fall back to a scanned ``decode_step`` (see ``_needs_scan_prefill``).
+    MoE sublayers go through the decode-default ``gather`` path, which is
+    drop-free and per-token independent — a packed prefill therefore
+    equals a sequence of single-request prefills.
+    """
+    a = ctx.arch
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if S > cache_len:
+        raise ValueError(f"prompt length {S} exceeds cache_len {cache_len}")
+    if lens is None:
+        lens = jnp.full((B,), S, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    cache = init_cache(ctx, B, cache_len)
+
+    if a.family == "audio" and "frontend" in batch:
+        from repro.models.transformer import _run_encoder
+        enc_out = _run_encoder(params, batch["frontend"].astype(a.jnp_dtype),
+                               ctx)
+        cache = fill_cross_cache(params, cache, enc_out, ctx)
+
+    if _needs_scan_prefill(a):
+        return _prefill_by_scan(params, batch, cache, ctx, lens)
+
+    prefix, group, n_groups = layer_plan(a)
+    x = layers.embed_apply(params["embed"], tokens)
+    if a.family == "vlm" and "frontend" in batch:
+        patches = jax.nn.gelu(batch["frontend"].astype(x.dtype)
+                              @ params["proj"]["w1"]) @ params["proj"]["w2"]
+        n = patches.shape[1]
+        x = jnp.concatenate([patches, x[:, n:]], axis=1)
+    if not ctx.decode_replicated:
+        x = sharding.constrain(x, "batch", None, None)
+
+    new_cache = {}
+    for i, sub in enumerate(prefix):
+        x, new_cache[f"prefix{i}"] = _prefill_sublayer(
+            params[f"prefix{i}"], dict(cache[f"prefix{i}"]), x, sub, ctx,
+            lens, layer_idx=i)
+
+    n_prefix = len(prefix)
+    if _overrides_hit_groups(ctx, n_prefix, group, n_groups, decode=True):
+        new_gs = []
+        for g in range(n_groups):
+            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            cg = jax.tree_util.tree_map(lambda a: a[g], cache["groups"])
+            for j, sub in enumerate(group):
+                x, cg[f"sub{j}"] = _prefill_sublayer(
+                    pg[f"sub{j}"], dict(cg[f"sub{j}"]), x, sub, ctx, lens,
+                    layer_idx=n_prefix + g * len(group) + j)
+            new_gs.append(cg)
+        new_cache["groups"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_gs)
+    else:
+        def body(x, pc):
+            p, c = pc
+            c = jax.tree_util.tree_map(lambda v: v, c)  # shallow copy
+            for j, sub in enumerate(group):
+                x, c[f"sub{j}"] = _prefill_sublayer(
+                    p[f"sub{j}"], dict(c[f"sub{j}"]), x, sub, ctx, lens)
+            return x, c
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               cache["groups"]))
+        new_cache["groups"] = new_groups
+
+    x = layers.norm_apply(params["final_norm"], x, a.norm)
+    logits = layers.unembed_apply(params["embed"], x)
+    last = jnp.take_along_axis(
+        logits.astype(jnp.float32),
+        jnp.maximum(lens - 1, 0)[:, None, None], axis=1)[:, 0]
+    return last, new_cache

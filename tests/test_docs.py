@@ -1,0 +1,30 @@
+"""Docs freshness, in-repo: the same check CI's lint lane runs, plus a
+negative case proving the checker still catches stale references."""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+import check_docs  # noqa: E402
+
+
+def test_repo_docs_are_fresh():
+    missing, problems = check_docs.check(REPO)
+    assert not missing, f"docs missing: {missing}"
+    assert not problems, f"stale doc references: {problems}"
+
+
+def test_checker_catches_stale_refs(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "README.md").write_text(
+        "see `src/repro/gone.py`, `--no-such-flag`, `repro.nope.mod`\n")
+    missing, problems = check_docs.check(str(tmp_path), ("README.md",))
+    assert not missing
+    assert sorted(k for _, k, _ in problems) == ["flag", "module", "path"]
+
+
+def test_checker_reports_missing_doc(tmp_path):
+    missing, problems = check_docs.check(str(tmp_path), ("nope.md",))
+    assert missing == ["nope.md"] and not problems
