@@ -29,7 +29,9 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import make_mesh, shard_map
 from repro.core import dispatch as dispatch_lib, gating
 from repro.core.capacity import make_plan
+from repro.kernels.moe_fused import ops as fused_ops
 from repro.kernels.moe_gemm import ops as gemm_ops
+from repro.kernels.moe_permute import ops as permute_ops
 
 PATHS = ("a2a", "a2a_pipelined", "gather", "einsum")
 
@@ -39,6 +41,14 @@ PATHS = ("a2a", "a2a_pipelined", "gather", "einsum")
 # otherwise the block-skip saving drowns on CPU CI.
 GEMM_E, GEMM_C, GEMM_D, GEMM_F, GEMM_BC = 4, 512, 128, 512, 128
 GEMM_OCCS = (25, 50, 100)
+# gemm_fused contrast: the dispatch→GEMM→combine megakernel must come in no
+# slower than the same traffic through the three-kernel composition
+# (permute → ragged grouped GEMM → unpermute) on the CPU interpret path —
+# it runs strictly fewer kernel launches and zero [S, d] HBM round trips,
+# so any slowdown means the fused grid is doing extra work.  Ratio is
+# loose-ish because the three compared kernels interleave differently with
+# interpreter per-step copy overhead on shared CI runners.
+FUSED_MAX_VS_UNFUSED = 1.10
 
 
 def _modes():
@@ -144,6 +154,54 @@ def run(quick: bool = False):
                     block_c=GEMM_BC, use_pallas=_f),
                 _x=g_xo, _v=valid, _f=flag))))
 
+    # gemm_fused rows: the same expert shapes through the fused megakernel
+    # vs the three-kernel composition, both with the kernels forced on, at
+    # partial occupancy.  Tokens are distinct per valid slot (K = 1
+    # inverse) so the unfused combine is a plain unpermute; slack slots
+    # carry the sentinel and zero weight, exactly as build_indices emits
+    # them.
+    fused_rows = {}
+    if fused_ops.use_fused(True):
+        rngf = np.random.default_rng(12)
+        T_f = GEMM_E * GEMM_C
+        S_f = GEMM_E * GEMM_C
+        f_x = jax.random.normal(jax.random.PRNGKey(12), (T_f, GEMM_D),
+                                jnp.float32)
+        for occ in GEMM_OCCS:
+            nrows = GEMM_C * occ // 100
+            perm = rngf.permutation(T_f)
+            tok = np.full(S_f, T_f, np.int32)
+            w = np.zeros(S_f, np.float32)
+            for e in range(GEMM_E):
+                seg = slice(e * GEMM_C, e * GEMM_C + nrows)
+                tok[seg] = perm[e * nrows:(e + 1) * nrows]
+                w[seg] = rngf.uniform(0.5, 1.0, nrows)
+            inv_idx = np.full((T_f, 1), S_f, np.int32)
+            inv_w = np.zeros((T_f, 1), np.float32)
+            kept = tok < T_f
+            inv_idx[tok[kept], 0] = np.nonzero(kept)[0]
+            inv_w[tok[kept], 0] = w[kept]
+            valid = jnp.full((GEMM_E,), nrows, jnp.int32)
+            tok_j, w_j = jnp.asarray(tok), jnp.asarray(w)
+            ii_j, iw_j = jnp.asarray(inv_idx), jnp.asarray(inv_w)
+
+            def _fused(p, xx, _t=tok_j, _w=w_j, _v=valid):
+                return fused_ops.local_moe(
+                    f_x, _t, _w, g_offs, g_exps, _v, g_wi, g_wg, g_wo,
+                    block_c=GEMM_BC, use_pallas=True)
+
+            def _unfused(p, xx, _t=tok_j, _v=valid, _ii=ii_j, _iw=iw_j):
+                buf = permute_ops.permute(f_x, _t, use_pallas=True)
+                ys = gemm_ops.grouped_ffn_ragged(
+                    buf, g_offs, g_exps, _v, g_wi, g_wg, g_wo,
+                    block_c=GEMM_BC, use_pallas=True)
+                return permute_ops.unpermute(ys, _ii, _iw, use_pallas=True)
+
+            for mode, fn in (("kernel", _fused), ("unfused", _unfused)):
+                label = f"gemm_fused-{occ:03d}_pallas-{mode}"
+                fused_rows[label] = (occ, mode, nrows * GEMM_E)
+                configs.append((label, jax.jit(fn)))
+
     print(f"# dispatch sweep: T={T} d={D} E={N} k={K} "
           f"backend={jax.default_backend()} "
           f"({rounds} interleaved rounds x {iters} iters, min)")
@@ -159,7 +217,8 @@ def run(quick: bool = False):
                 # are also the cheapest rows); the big-GEMM occupancy rows
                 # get 2x so their min shakes off contention spikes
                 reps = 4 if label.startswith("anchor") \
-                    else 2 if label.startswith("gemm_occupancy") else 1
+                    else 2 if label.startswith(("gemm_occupancy",
+                                                "gemm_fused")) else 1
                 for _ in range(reps):
                     t0 = time.perf_counter()
                     for _ in range(iters):
@@ -172,8 +231,9 @@ def run(quick: bool = False):
     print(f"{'config':>34s}{'us/call':>10s}{'  realized':>12s}")
     for label, _ in configs:
         us = float(min(samples[label]))
-        if label in gemm_rows:
-            occ, mode, realized = gemm_rows[label]
+        if label in gemm_rows or label in fused_rows:
+            occ, mode, realized = (gemm_rows.get(label)
+                                   or fused_rows[label])
             derived = (f"E={GEMM_E};C={GEMM_C};d={GEMM_D};f={GEMM_F};"
                        f"rows={realized}/{GEMM_E * GEMM_C};occ={occ}%;"
                        f"backend={jax.default_backend()}")
@@ -202,6 +262,30 @@ def run(quick: bool = False):
                 f"25%-occupancy ragged GEMM not measurably faster than "
                 f"100% on the kernel path ({t25:.0f}us vs {t100:.0f}us): "
                 "the block-skip predicate is not buying wall-clock")
+
+    # the fused megakernel's own gates, same discipline: (a) fused must be
+    # no slower than the three-kernel composition it replaces at every
+    # occupancy, and (b) fused must inherit the slack-block skip — the 25%
+    # row lands measurably under the 100% row, same bar as the plain
+    # ragged GEMM above.  Raising turns into a dispatch_FAILED row.
+    if fused_rows and jax.default_backend() == "cpu":
+        for occ in GEMM_OCCS:
+            tf = min(samples[f"gemm_fused-{occ:03d}_pallas-kernel"])
+            tu = min(samples[f"gemm_fused-{occ:03d}_pallas-unfused"])
+            print(f"# gemm fused/unfused ratio at {occ}%: {tf / tu:.3f}")
+            if tf > FUSED_MAX_VS_UNFUSED * tu:
+                raise RuntimeError(
+                    f"fused megakernel slower than the three-kernel path "
+                    f"at {occ}% occupancy ({tf:.0f}us vs {tu:.0f}us): "
+                    "fusion is not paying for itself")
+        f25 = min(samples["gemm_fused-025_pallas-kernel"])
+        f100 = min(samples["gemm_fused-100_pallas-kernel"])
+        print(f"# gemm fused 25%/100% ratio: {f25 / f100:.3f}")
+        if f25 > 0.92 * f100:
+            raise RuntimeError(
+                f"25%-occupancy fused megakernel not measurably faster "
+                f"than 100% ({f25:.0f}us vs {f100:.0f}us): the fused grid "
+                "lost the slack-block skip")
 
     # cross-check while we are here: step-time rows are only comparable if
     # the paths still agree (guards against benchmarking a broken kernel).

@@ -205,7 +205,8 @@ def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
 
 def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
                     *, seg_experts=None, rows_valid=None,
-                    chunk_granular: bool = False, use_pallas=None):
+                    chunk_granular: bool = False, use_pallas=None,
+                    slot_to_token=None, slot_w=None):
     """Segment-offset grouped expert FFN on a flat [R, d] row buffer.
 
     ``seg_offsets`` is the static offset vector of the contiguous sorted
@@ -218,8 +219,17 @@ def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
     zero-filled; outputs there are zero either way, computed-from-zeros or
     skipped).
 
+    Fused mode: passing ``slot_to_token`` / ``slot_w`` (the flat sort-order
+    maps of ``routing.build_indices``) switches the meaning of ``x_flat``
+    from the segment-sorted slot buffer to the **raw [T, d] token buffer**
+    — dispatch gather, expert FFN, and the gate-weighted combine run as one
+    ``moe_fused.local_moe`` call and the return value is the [T, d] float32
+    combined output.  The model-axis psum still happens here (the
+    down-projection partials commute with the linear combine scatter), so
+    callers see full activations either way.
+
     Backend routing: with the Pallas kernels active for ``use_pallas``
-    (``moe_gemm.ops.use_ragged``) every call goes through the
+    (``moe_gemm.ops.use_ragged``) every non-fused call goes through the
     occupancy-aware ragged entry, so FLOPs scale with delivered tokens;
     otherwise equal fully-occupied per-expert spans reshape onto the dense
     einsum / ``cfg.use_kernel`` path exactly as before, and any genuinely
@@ -228,6 +238,15 @@ def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
     from repro.kernels.moe_gemm import ops as moe_gemm_ops
     offs = tuple(int(o) for o in seg_offsets)
     d = x_flat.shape[-1]
+    if slot_to_token is not None:
+        from repro.kernels.moe_fused import ops as moe_fused_ops
+        y = moe_fused_ops.local_moe(
+            x_flat, slot_to_token, slot_w, offs, seg_experts, rows_valid,
+            params["w_in"], params.get("w_gate"), params["w_out"],
+            activation=cfg.activation, use_pallas=use_pallas)
+        if ep.model_axis is not None:
+            y = jax.lax.psum(y, ep.model_axis)
+        return y
     if moe_gemm_ops.use_ragged(use_pallas) or cfg.use_kernel:
         y = moe_gemm_ops.grouped_ffn_segments(
             x_flat, offs, params["w_in"], params.get("w_gate"),

@@ -43,6 +43,7 @@ from repro.core.dispatch import routing, schedule, transport
 from repro.core.dispatch.base import (EPSpec, MoEConfig, expert_ffn,
                                       expert_ffn_flat, shared_ffn)
 from repro.core.dispatch.routing import _prod
+from repro.kernels.moe_fused import ops as moe_fused_ops
 from repro.kernels.moe_gemm import ops as moe_gemm_ops
 from repro.kernels.moe_permute import ops as permute_ops
 
@@ -188,6 +189,21 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     of the static worst-case capacity.  Numerically this changes nothing —
     the skipped rows are the permute sentinel's zero-filled slack, whose
     FFN output is zero either way.
+
+    Fused local path: when the kernels are active
+    (``moe_fused.ops.use_fused``), stages whose delivery chain is the
+    identity — every delivery axis has size 1, i.e. the folded-in self
+    level of a unit mesh axis — skip the permute → a2a → GEMM → a2a →
+    unpermute round trip entirely.  Their selections are flattened by the
+    same ``build_indices`` into a local index set and computed in one
+    ``moe_fused.local_moe`` megakernel call (through
+    ``expert_ffn_flat(slot_to_token=...)``): no sorted [S, d] capacity
+    buffer in HBM, no collectives, gather + grouped GEMM + gate-weighted
+    combine in a single pass.  Remote stages keep the permute → a2a chain
+    unchanged — a (token, expert) pair occupies at most one slot globally,
+    so the local and remote index sets partition the slots and their
+    combined outputs simply add.  The local contribution is computed once,
+    outside the chunk pipeline (it has no comm to overlap).
     """
     cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
     T, d = x.shape
@@ -201,22 +217,50 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     chunked = num_chunks > 1
     topk_idx = routed.gate_out["topk_idx"]
 
-    # per-stage state: (transport stage, padded selection, capacity axis,
-    # per-chunk capacity, expert-row count per chunk)
-    work = []
+    # split the active stages: purely local delivery fuses, the rest keep
+    # the staged transport.  Per-stage state for the remote group:
+    # (transport stage, padded selection, capacity axis, per-chunk
+    # capacity, expert-row count per chunk)
+    fused_on = moe_fused_ops.use_fused(eng.use_pallas)
+    local_work, work = [], []
     for (s, sel), stage in zip(routed.sels, stages):
+        if fused_on and stage.num_dests == 1:
+            local_work.append((stage, sel))
+            continue
         cap_axis = s + 2
         sel = routing.pad_selection(sel, axis=cap_axis, multiple=num_chunks)
         cpc = sel.idx.shape[cap_axis] // num_chunks
         work.append((stage, sel, cap_axis, cpc, stage.num_dests * cpc))
 
-    # the shared buffer builder: chunk j's capacity slice of every stage,
-    # flattened into one sort-order index set (sync == the single chunk 0)
+    out_local = None
+    if local_work:
+        # the fused megakernel path: flatten the local stages' selections
+        # with the same shared builder, then one local_moe call — permute,
+        # ragged GEMM, and weighted combine in a single kernel, segment
+        # occupancy (rows_per_expert) consumed directly (no count exchange:
+        # the rows never leave the device)
+        E_l = params["w_in"].shape[0]
+        li = routing.build_indices(
+            tuple((stage.index, sel) for stage, sel in local_work),
+            topk_idx, T)
+        offs, exps = [0], []
+        for stage, sel in local_work:
+            width = sel.idx.shape[-1]
+            for e in range(E_l):
+                offs.append(offs[-1] + width)
+                exps.append(e)
+        out_local = expert_ffn_flat(
+            params, x, tuple(offs), cfg, ep, seg_experts=tuple(exps),
+            rows_valid=li.rows_per_expert, slot_to_token=li.slot_to_token,
+            slot_w=li.slot_w, use_pallas=eng.use_pallas)        # [T, d] f32
+
+    # the shared buffer builder: chunk j's capacity slice of every remote
+    # stage, flattened into one sort-order index set (sync == chunk 0)
     indices = [routing.build_indices(
         tuple((stage.index,
                routing.slice_selection(sel, cap_axis, j * cpc, cpc))
               for stage, sel, cap_axis, cpc, _ in work),
-        topk_idx, T) for j in range(num_chunks)]
+        topk_idx, T) for j in range(num_chunks)] if work else []
 
     # occupancy-aware compute: only pay for the count exchange when the
     # ragged Pallas entry will actually consume it
@@ -276,7 +320,12 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
         return out + mixed.astype(out.dtype)
 
     out = schedule.software_pipeline(num_chunks, dispatch, compute, combine,
-                                     None)
+                                     None) if work else jnp.zeros((T, d),
+                                                                  x.dtype)
+    if out_local is not None:
+        # like shared_ffn: independent of every chunk, added after the
+        # pipeline drains
+        out = out + out_local.astype(out.dtype)
 
     if cfg.num_shared_experts:
         # independent of every chunk: another overlap opportunity for the
@@ -340,27 +389,32 @@ def _gather_path(params, x, eng: DispatchEngine):
     gate_out = gating.gate_forward(params["gate"], xg, gate_cfg, None)
     aux = gating.aux_loss(gate_out, gate_cfg, levels)
 
-    xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)                # [E_l, Tg, d]
     Tg, d = xg.shape
-    if moe_gemm_ops.use_ragged(eng.use_pallas):
-        # occupancy-aware decode grid: the dense [E_l, Tg] buffer computes
-        # every (expert, token) pair, but the combine only ever reads slots
-        # the gate picked — an expert picked by *no* gathered token is pure
-        # slack, so its whole Tg-row segment is skipped by the ragged GEMM
-        picked = routing.gather_weights(gate_out, my_rank, E_l) > 0  # [Tg,E_l]
-        valid = jnp.where(jnp.any(picked, axis=0), Tg, 0).astype(jnp.int32)
-        y = expert_ffn_flat(params, xin.reshape(E_l * Tg, d),
-                            transport.expert_segments(E_l, Tg), cfg, ep,
-                            seg_experts=tuple(range(E_l)), rows_valid=valid,
-                            use_pallas=eng.use_pallas)
-        y = y.reshape(E_l, Tg, d)
+    if moe_fused_ops.use_fused(eng.use_pallas):
+        # fused decode grid: the dense [E_l, Tg] slot space is never
+        # materialized (nor is the [E_l, Tg, d] broadcast buffer) — slot
+        # ``e * Tg + t`` maps token ``t`` through expert ``e``, so the
+        # megakernel gathers each expert's rows straight from the gathered
+        # tokens and scatter-accumulates with the gate weights fused in.
+        # An expert picked by *no* gathered token is pure slack: its whole
+        # Tg-row segment is a skipped zero-valid segment, exactly the
+        # whole-segment skip the ragged GEMM did here before.
+        wts = routing.gather_weights(gate_out, my_rank, E_l)     # [Tg, E_l]
+        valid = jnp.where(jnp.any(wts > 0, axis=0), Tg, 0).astype(jnp.int32)
+        slot_tok = jnp.tile(jnp.arange(Tg, dtype=jnp.int32), E_l)
+        y = expert_ffn_flat(params, xg, transport.expert_segments(E_l, Tg),
+                            cfg, ep, seg_experts=tuple(range(E_l)),
+                            rows_valid=valid, slot_to_token=slot_tok,
+                            slot_w=wts.T.reshape(-1),
+                            use_pallas=eng.use_pallas)           # [Tg, d]
     else:
+        xin = jnp.broadcast_to(xg, (E_l,) + xg.shape)            # [E_l, Tg, d]
         y = expert_ffn(params, xin, cfg, ep)                     # [E_l, Tg, d]
-    # combine through the same weighted inverse-permutation the staged
-    # paths use: the dense [E_l, Tg] grid is a degenerate slot buffer
-    inv_idx, inv_w = routing.gather_inverse(gate_out, my_rank, E_l, Tg)
-    y = permute_ops.unpermute(y.reshape(E_l * Tg, -1), inv_idx, inv_w,
-                              use_pallas=eng.use_pallas)         # [Tg, d]
+        # combine through the same weighted inverse-permutation the staged
+        # paths use: the dense [E_l, Tg] grid is a degenerate slot buffer
+        inv_idx, inv_w = routing.gather_inverse(gate_out, my_rank, E_l, Tg)
+        y = permute_ops.unpermute(y.reshape(E_l * Tg, -1), inv_idx, inv_w,
+                                  use_pallas=eng.use_pallas)     # [Tg, d]
     y = y.astype(x.dtype)
 
     y = tr.reduce(y)

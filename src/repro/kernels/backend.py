@@ -1,8 +1,8 @@
 """Shared Pallas backend policy for the kernel packages.
 
-One policy, two consumers (``moe_permute``, ``moe_gemm``) — keeping it in a
-single module means the permute and GEMM layers of the same engine call can
-never drift onto different backends:
+One policy, three consumers (``moe_permute``, ``moe_gemm``, ``moe_fused``)
+— keeping it in a single module means the permute, GEMM, and fused layers
+of the same engine call can never drift onto different backends:
 
 * ``want_pallas(None)`` (auto) resolves to the Pallas kernels on
   accelerators (TPU/GPU) and the jnp references elsewhere;
@@ -12,6 +12,8 @@ never drift onto different backends:
   ``interpret=True``; GPU has no Mosaic/Triton lowering for the
   scalar-prefetch grids these kernels use, so the reference path is used
   even when the flag is on.
+* ``kernels_active(flag)`` — the one decision every public kernel entry
+  keys on: ``want_pallas(flag) and pallas_viable()``.
 * ``interpret_mode()``: everything that is not a real TPU interprets.
 """
 
@@ -23,15 +25,27 @@ import jax
 import numpy as np
 
 
+def use_pallas_default() -> bool:
+    """The engine's auto policy: Pallas on accelerators, ref elsewhere."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
 def want_pallas(use_pallas=None) -> bool:
     if use_pallas is None:
-        return (jax.default_backend() in ("tpu", "gpu")
+        return (use_pallas_default()
                 or os.environ.get("REPRO_KERNEL_INTERPRET") == "1")
     return bool(use_pallas)
 
 
 def pallas_viable() -> bool:
     return jax.default_backend() in ("tpu", "cpu")
+
+
+def kernels_active(use_pallas=None) -> bool:
+    """Whether the Pallas entries actually run for this ``use_pallas`` flag
+    (vs the jnp references).  The dispatch engine keys the occupancy
+    machinery (valid-count exchange, ragged/fused compute) off this."""
+    return want_pallas(use_pallas) and pallas_viable()
 
 
 def interpret_mode() -> bool:

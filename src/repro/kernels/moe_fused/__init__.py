@@ -1,0 +1,15 @@
+"""Fused dispatch→GEMM→combine megakernel for local MoE traffic.
+
+``local_moe`` folds the permute gather and the unpermute/gate-weight
+combine into the ragged grouped GEMM's scalar-prefetch grid, so local
+(self-level) dispatch never materializes a sorted [S, d] capacity buffer
+in HBM.  Pallas TPU kernel in kernel.py, pure-jnp oracle in ref.py,
+backend/autodiff policy in ops.py — same layout and shared
+``repro.kernels.backend`` policy as ``moe_permute`` / ``moe_gemm``.
+"""
+
+from repro.kernels.moe_fused.ops import (    # noqa: F401
+    local_moe,
+    use_fused,
+)
+from repro.kernels.moe_fused.ref import local_moe_ref    # noqa: F401

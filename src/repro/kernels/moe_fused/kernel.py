@@ -1,0 +1,149 @@
+"""Fused dispatch→GEMM→combine Pallas megakernel (permute-free local path).
+
+The kernel-on engine previously made three HBM round trips over the same
+rows per layer: ``permute`` row-DMAs tokens into a sorted [S, d] capacity
+buffer, the ragged grouped GEMM reads it back, and ``unpermute`` scatters
+expert outputs into token order.  For *local* traffic (the stage-0 self
+level, and every stage of a unit mesh) nothing ever leaves the device, so
+the sorted buffer is pure staging — this kernel deletes it.
+
+Grid: ``(row-block, f-block)`` — the same static block decomposition the
+ragged GEMM uses (``moe_gemm.ops.plan_blocks``) — with **five**
+scalar-prefetch SMEM vectors: the permute's ``slot_to_token`` map and
+per-slot combine weights feed the GEMM's ``block_row`` / ``block_eid`` /
+``block_nvalid`` vectors directly:
+
+    slot_to_token[s]  source token of capacity slot ``s`` (sentinel = T)
+    slot_w[s]         combine weight of slot ``s`` (0 for empty slots)
+    block_row[b]      row-block index of block ``b`` in slot space
+    block_eid[b]      expert whose weights block ``b`` multiplies
+    block_nvalid[b]   runtime valid-row count of block ``b`` (0..bc)
+
+Each grid step's *gather prologue* (first f block of a row block) pulls
+its ``bc`` input rows straight from the resident [T + 1, d] token buffer
+via ``slot_to_token`` — the sorted [S, d] buffer never exists in HBM.
+``pl.when(block_nvalid > 0)`` gates the whole body exactly as in the
+ragged GEMM, so slack blocks still issue zero matmuls.  The *combine
+epilogue* (last f block) mirrors ``unpermute``: the f32 down-projection
+accumulator is scatter-accumulated into the resident [T, d] output with
+the gate-weight multiply fused in, walking only the block's ``nvalid``
+live slots (valid slots are a segment prefix, so none is the sentinel).
+
+Both residents (token input, combined output) use constant-index-map
+whole-array blocks, which bounds the fused path to layouts whose
+[T, d] + [S] vectors fit VMEM alongside the weight blocks — exactly the
+local-stage shapes the engine routes here (remote stages keep the
+permute → a2a → ragged GEMM chain; see ``engine._staged_a2a``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.moe_gemm.kernel import _ffn_body
+
+
+def _fused_kernel(tok_ref, w_ref, row_ref, eid_ref, nvalid_ref,
+                  x_ref, win_ref, wgate_ref, wout_ref, o_ref,
+                  acc_ref, xblk_ref, *, activation: str, block_c: int):
+    b = pl.program_id(0)               # row-block index (scalar-prefetched)
+    j = pl.program_id(1)               # f-block index (sequential)
+    nf = pl.num_programs(1)
+    nv = nvalid_ref[b]                 # runtime valid rows of this block
+    base = row_ref[b] * block_c        # first slot of this block
+
+    @pl.when((b == 0) & (j == 0))
+    def _zero_out():
+        # the combined output accumulates across row blocks; zero it once
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # the same occupancy predicate as the ragged GEMM: row blocks past a
+    # segment's realized count do zero gathers, zero MXU work, zero stores
+    @pl.when(nv > 0)
+    def _compute():
+        @pl.when(j == 0)
+        def _gather():
+            # dispatch fused in: pull the block's rows straight from the
+            # token buffer (sentinel slots read the trailing zero row)
+            def body(i, _):
+                t = tok_ref[base + i]
+                xblk_ref[pl.ds(i, 1), :] = x_ref[pl.ds(t, 1), :]
+                return 0
+            jax.lax.fori_loop(0, block_c, body, 0)
+
+        part = _ffn_body(xblk_ref[...], win_ref, wgate_ref, wout_ref,
+                         activation=activation)
+        rows = jax.lax.broadcasted_iota(jnp.int32, part.shape, 0)
+        part = jnp.where(rows < nv, part, 0.0)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = part
+
+        @pl.when(j > 0)
+        def _acc():
+            acc_ref[...] += part
+
+        @pl.when(j == nf - 1)
+        def _scatter():
+            # combine fused in: scatter-accumulate the finished rows into
+            # token order with the gate-weight multiply applied — only the
+            # nv live slots, none of which is the sentinel
+            def body(i, _):
+                t = tok_ref[base + i]
+                w = w_ref[base + i]
+                o_ref[pl.ds(t, 1), :] += w * acc_ref[pl.ds(i, 1), :]
+                return 0
+            jax.lax.fori_loop(0, nv, body, 0)
+
+
+def local_moe_pallas(x_padded, slot_to_token, slot_w, block_row, block_eid,
+                     block_nvalid, w_in, w_gate, w_out, *,
+                     activation: str = "swiglu", block_c: int,
+                     block_f: int = 256, interpret: bool = False):
+    """x_padded: [T + 1, d] tokens (last row zeros); slot_to_token: [S]
+    int32 in [0, T]; slot_w: [S] float32; block vectors as in
+    ``moe_gemm.kernel.grouped_ffn_ragged_pallas``.  Returns the [T, d]
+    float32 combined output (cast at the caller)."""
+    T = x_padded.shape[0] - 1
+    d = x_padded.shape[-1]
+    f = w_in.shape[-1]
+    bc = block_c
+    bf = min(block_f, f)
+    nb = block_row.shape[0]
+    nf = pl.cdiv(f, bf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(nb, nf),
+        in_specs=[
+            # whole token buffer resident across the grid
+            pl.BlockSpec((T + 1, d),
+                         lambda b, j, tok, w, row, eid, nv: (0, 0)),
+            pl.BlockSpec((1, d, bf),
+                         lambda b, j, tok, w, row, eid, nv: (eid[b], 0, j)),
+            pl.BlockSpec((1, d, bf),
+                         lambda b, j, tok, w, row, eid, nv: (eid[b], 0, j)),
+            pl.BlockSpec((1, bf, d),
+                         lambda b, j, tok, w, row, eid, nv: (eid[b], j, 0)),
+        ],
+        # whole combined output resident: row blocks of the same token
+        # accumulate into it across the sequential grid
+        out_specs=pl.BlockSpec((T, d),
+                               lambda b, j, tok, w, row, eid, nv: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32),
+                        pltpu.VMEM((bc, d), x_padded.dtype)],
+    )
+    kernel = functools.partial(_fused_kernel, activation=activation,
+                               block_c=bc)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=interpret,
+    )(slot_to_token, slot_w.astype(jnp.float32), block_row, block_eid,
+      block_nvalid, x_padded, w_in, w_gate, w_out)

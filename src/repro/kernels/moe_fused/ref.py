@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused dispatch→GEMM→combine megakernel.
+
+By construction this IS the three-kernel path — permute gather, ragged
+grouped FFN, weighted scatter-add combine — composed out of the existing
+references, so "fused allclose to (permute → grouped GEMM → unpermute)"
+is the defining property, not an approximation.  It is differentiable
+(the ragged reference masks invalid-row gradients) and doubles as the
+``custom_vjp`` backward of the Pallas forward in ops.py.
+
+Sentinel convention (shared with moe_permute): ``slot_to_token == T``
+addresses an implicit zero row on the way in and is dropped by the
+scatter on the way out; slots at or past a segment's ``rows_valid`` count
+produce exact-zero FFN rows, so garbage tokens/weights parked there can
+never leak into the combined output.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.ref import grouped_ffn_ragged_ref
+from repro.kernels.moe_permute.ref import permute_ref
+
+
+def local_moe_ref(x, slot_to_token, slot_w, seg_offsets, seg_experts,
+                  rows_valid, w_in, w_gate, w_out, *,
+                  activation: str = "swiglu"):
+    """Fused local MoE: token buffer in, combined token buffer out.
+
+    x: [T, d] tokens; slot_to_token: [S] int32 in [0, T] (T = sentinel);
+    slot_w: [S] combine weight per slot (0 for empty slots);
+    seg_offsets/seg_experts/rows_valid: the static segment layout +
+    runtime occupancy the ragged grouped FFN consumes.  Returns the
+    [T, d] float32 combined output
+    ``out[t] = sum_{s: slot_to_token[s]==t} slot_w[s] * FFN(x[t])[s]``.
+    """
+    T = x.shape[0]
+    buf = permute_ref(x, slot_to_token)                         # [S, d]
+    ys = grouped_ffn_ragged_ref(buf, seg_offsets, seg_experts, rows_valid,
+                                w_in, w_gate, w_out, activation=activation)
+    out = jnp.zeros((T, x.shape[1]), jnp.float32)
+    return out.at[slot_to_token].add(
+        ys.astype(jnp.float32) * slot_w[:, None].astype(jnp.float32),
+        mode="drop")

@@ -39,8 +39,7 @@ import numpy as np
 
 from repro.kernels.backend import (float0 as _float0,
                                    interpret_mode as _interpret,
-                                   pallas_viable as _pallas_viable,
-                                   want_pallas as _want_pallas)
+                                   kernels_active as _kernels_active)
 from repro.kernels.moe_gemm import kernel
 from repro.kernels.moe_gemm.ref import (grouped_ffn_ragged_ref,
                                         grouped_ffn_ref,
@@ -53,9 +52,11 @@ def use_ragged(use_pallas=None) -> bool:
     The dispatch engine keys the whole occupancy machinery (valid-count
     exchange, ragged compute) off this: when False the engine runs the
     legacy dense path untouched — no extra collectives on backends where
-    the kernel would not run anyway.
+    the kernel would not run anyway.  This is the shared
+    ``repro.kernels.backend.kernels_active`` decision, re-exported under
+    the historical name.
     """
-    return _want_pallas(use_pallas) and _pallas_viable()
+    return _kernels_active(use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("activation",))
@@ -64,7 +65,7 @@ def _ref_jit(x, w_in, w_gate, w_out, activation="swiglu"):
 
 
 def grouped_ffn(x, w_in, w_gate, w_out, *, activation: str = "swiglu"):
-    if _want_pallas(None) and _pallas_viable():
+    if _kernels_active(None):
         return kernel.grouped_ffn_pallas(x, w_in, w_gate, w_out,
                                          activation=activation,
                                          interpret=_interpret())

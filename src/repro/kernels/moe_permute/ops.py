@@ -26,16 +26,11 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import (float0 as _float0,
                                    interpret_mode as _interpret,
-                                   pallas_viable as _pallas_viable,
-                                   want_pallas as _want_pallas)
+                                   kernels_active as _kernels_active,
+                                   use_pallas_default)     # noqa: F401
 from repro.kernels.moe_permute import kernel
 from repro.kernels.moe_permute.ref import (_with_zero_row, permute_ref,
                                            unpermute_ref)
-
-
-def use_pallas_default() -> bool:
-    """The engine's auto policy: Pallas on accelerators, ref elsewhere."""
-    return jax.default_backend() in ("tpu", "gpu")
 
 
 # --- permute ---------------------------------------------------------------
@@ -67,7 +62,7 @@ _permute_pallas.defvjp(_permute_fwd, _permute_bwd)
 def permute(x, slot_to_token, *, use_pallas=None):
     """[T, d] tokens -> [S, d] sorted capacity-slot rows (see ref.py for
     the sentinel convention)."""
-    if _want_pallas(use_pallas) and _pallas_viable():
+    if _kernels_active(use_pallas):
         return _permute_pallas(x, slot_to_token, _interpret())
     return permute_ref(x, slot_to_token)
 
@@ -89,14 +84,21 @@ def _unpermute_fwd(y, inv_idx, inv_w, interpret):
 def _unpermute_bwd(interpret, res, g):
     y, inv_idx, inv_w = res
     S, d = y.shape
+    K = inv_idx.shape[1]
     g = g.astype(jnp.float32)                                   # [T, d]
-    # gy[s] = sum over picks mapping to slot s of w * g[token]
-    contrib = (g[:, None, :] * inv_w[..., None].astype(jnp.float32))
+    # K chunked scatter-adds / gathers: peak extra memory is one [T, d]
+    # temporary per pick instead of a materialized [T, K, d] contrib tensor
+    y_z = _with_zero_row(y)
     gy = jnp.zeros((S, d), jnp.float32)
-    gy = gy.at[inv_idx.reshape(-1)].add(contrib.reshape(-1, d), mode="drop")
-    # gw[t, k] = <g[t], y[inv_idx[t, k]]>
-    picked = jnp.take(_with_zero_row(y), inv_idx, axis=0).astype(jnp.float32)
-    gw = jnp.sum(g[:, None, :] * picked, axis=-1).astype(inv_w.dtype)
+    gw_cols = []
+    for k in range(K):
+        wk = inv_w[:, k].astype(jnp.float32)[:, None]           # [T, 1]
+        # gy[s] = sum over picks mapping to slot s of w * g[token]
+        gy = gy.at[inv_idx[:, k]].add(g * wk, mode="drop")
+        # gw[t, k] = <g[t], y[inv_idx[t, k]]>
+        picked = jnp.take(y_z, inv_idx[:, k], axis=0).astype(jnp.float32)
+        gw_cols.append(jnp.sum(g * picked, axis=-1))
+    gw = jnp.stack(gw_cols, axis=1).astype(inv_w.dtype)
     return gy.astype(y.dtype), _float0(inv_idx), gw
 
 
@@ -106,6 +108,6 @@ _unpermute_pallas.defvjp(_unpermute_fwd, _unpermute_bwd)
 def unpermute(y, inv_idx, inv_w, *, use_pallas=None):
     """[S, d] slot rows -> [T, d] float32 combined tokens, gate-weight
     multiply fused (see ref.py for the sentinel convention)."""
-    if _want_pallas(use_pallas) and _pallas_viable():
+    if _kernels_active(use_pallas):
         return _unpermute_pallas(y, inv_idx, inv_w, _interpret())
     return unpermute_ref(y, inv_idx, inv_w)

@@ -1,0 +1,323 @@
+"""moe_fused: the dispatch→GEMM→combine megakernel vs the three-kernel
+path (permute → ragged grouped GEMM → unpermute), its custom VJP, and the
+engine with the fused local path forced on.
+
+Run in the CI Pallas-interpret lane (``JAX_PLATFORMS=cpu
+REPRO_KERNEL_INTERPRET=1``) the fused kernel body executes under the
+Pallas interpreter, so CPU-only CI exercises the real gather / occupancy
+gate / scatter-accumulate code, not just the jnp oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover - CI has hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
+from repro.core import dispatch as dispatch_lib
+from repro.core.capacity import make_dispatch_plan
+from repro.kernels.moe_fused import ops as fused_ops
+from repro.kernels.moe_fused.ref import local_moe_ref
+from repro.kernels.moe_gemm import ops as gemm_ops
+from repro.kernels.moe_permute import ops as permute_ops
+from repro.kernels.moe_permute import ref as pr
+from test_moe_permute import (_engine_apply, _engine_setup, _random_maps,
+                              _route_as_rank0)
+
+
+def _weights(rng, E, d, f):
+    wi = jnp.asarray(rng.standard_normal((E, d, f)) * 0.3, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((E, d, f)) * 0.3, jnp.float32)
+    wo = jnp.asarray(rng.standard_normal((E, f, d)) * 0.3, jnp.float32)
+    return wi, wg, wo
+
+
+def _slot_fixture(rng, T, offs, occupancy, garbage=True):
+    """Slot maps with an ``occupancy`` fraction of each segment valid.
+
+    Valid slots are a prefix holding distinct real tokens with positive
+    weights (the build_indices contract).  When ``garbage`` is set, the
+    slack rows past the valid count are adversarial: *real* token indices
+    with *nonzero* weights — both the fused kernel and the three-kernel
+    path must mask them to exactly zero contribution.
+    """
+    S = offs[-1]
+    tok = np.full(S, T, np.int32)
+    w = np.zeros(S, np.float32)
+    valid = []
+    for s in range(len(offs) - 1):
+        width = offs[s + 1] - offs[s]
+        nv = min(int(round(width * occupancy)), T)
+        valid.append(nv)
+        tok[offs[s]:offs[s] + nv] = rng.choice(T, size=nv, replace=False)
+        w[offs[s]:offs[s] + nv] = rng.uniform(0.1, 1.0, nv)
+        if garbage:
+            slack = width - nv
+            tok[offs[s] + nv:offs[s + 1]] = rng.integers(0, T, slack)
+            w[offs[s] + nv:offs[s + 1]] = rng.uniform(0.1, 1.0, slack)
+    return (jnp.asarray(tok), jnp.asarray(w),
+            jnp.asarray(valid, jnp.int32))
+
+
+def _unfused(x, tok, w, offs, exps, valid, wi, wg, wo):
+    """The three-kernel path on the kernel entries: permute row-gather →
+    occupancy-aware ragged grouped GEMM → weighted scatter combine."""
+    buf = permute_ops.permute(x, tok, use_pallas=True)
+    ys = gemm_ops.grouped_ffn_ragged(buf, offs, exps, valid, wi, wg, wo,
+                                     use_pallas=True)
+    T = x.shape[0]
+    # inverse pick map of the valid slots (slack slots by contract carry
+    # zero output rows, so they are simply absent from the inverse)
+    tok_np, w_np, valid_np = map(np.asarray, (tok, w, valid))
+    picks = [[] for _ in range(T)]
+    for s in range(len(exps)):
+        for i in range(int(valid_np[s])):
+            slot = offs[s] + i
+            picks[int(tok_np[slot])].append(slot)
+    K = max(1, max(len(p) for p in picks))
+    S = offs[-1]
+    inv_idx = np.full((T, K), S, np.int32)
+    inv_w = np.zeros((T, K), np.float32)
+    for t, slots in enumerate(picks):
+        for k, slot in enumerate(slots):
+            inv_idx[t, k] = slot
+            inv_w[t, k] = w_np[slot]
+    return permute_ops.unpermute(ys, jnp.asarray(inv_idx),
+                                 jnp.asarray(inv_w), use_pallas=True)
+
+
+# ---------------------------------------------------------------------------
+# fused == three-kernel == oracle
+# ---------------------------------------------------------------------------
+
+
+class TestFusedVsThreeKernel:
+    @pytest.mark.parametrize("occupancy", [0.0, 0.5, 1.0])
+    @pytest.mark.parametrize("caps", [(6,), (6, 4), (8, 4, 2)])
+    def test_synthetic_layouts(self, occupancy, caps):
+        """Stage-major (stage, expert) segment layouts at empty / partial /
+        full occupancy, with garbage slack rows (real tokens, nonzero
+        weights past the valid count) that must not leak."""
+        rng = np.random.default_rng(int(occupancy * 10) + len(caps))
+        T, d, f, E = 23, 8, 12, 3
+        offs, exps = [0], []
+        for c in caps:
+            for e in range(E):
+                offs.append(offs[-1] + c)
+                exps.append(e)
+        offs, exps = tuple(offs), tuple(exps)
+        x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+        wi, wg, wo = _weights(rng, E, d, f)
+        tok, w, valid = _slot_fixture(rng, T, offs, occupancy)
+        want = local_moe_ref(x, tok, w, offs, exps, valid, wi, wg, wo)
+        fused = fused_ops.local_moe(x, tok, w, offs, exps, valid, wi, wg,
+                                    wo, use_pallas=True)
+        unfused = _unfused(x, tok, w, offs, exps, valid, wi, wg, wo)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   atol=1e-5, rtol=1e-5)
+        if occupancy == 0.0:
+            assert np.abs(np.asarray(fused)).max() == 0.0
+
+    @pytest.mark.parametrize("axis_sizes", [(2, 2), (2, 2, 2), (2, 2, 2, 2)])
+    @pytest.mark.parametrize("cf", [1.0, 8.0])
+    def test_plan_derived_layouts(self, axis_sizes, cf):
+        """Real routing on 2-/3-/4-level plans: the fused kernel on
+        build_indices' maps equals the three-kernel path on the same maps
+        (cf=1 drops tokens → partial occupancy; cf=8 keeps everything)."""
+        T, N, K = 32, 16, 2
+        plan = make_dispatch_plan(tokens_per_device=T, num_experts=N,
+                                  top_k=K, capacity_factor=cf,
+                                  axis_sizes=axis_sizes, mode="ta")
+        (tok, w, inv_idx, inv_w, counts), stages, E_l = _route_as_rank0(
+            plan, axis_sizes, T, N, K, seed=len(axis_sizes))
+        offs, exps = [0], []
+        for stg in stages:
+            width = min(stg.cap, T)
+            for _dest in range(stg.num_dests):
+                for e in range(E_l):
+                    offs.append(offs[-1] + width)
+                    exps.append(e)
+        offs, exps = tuple(offs), tuple(exps)
+        assert offs[-1] == tok.shape[0] and len(exps) == counts.shape[0]
+        rng = np.random.default_rng(7)
+        d, f = 8, 16
+        x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+        wi, wg, wo = _weights(rng, E_l, d, f)
+        fused = fused_ops.local_moe(x, tok, w, offs, exps, counts, wi, wg,
+                                    wo, use_pallas=True)
+        want = local_moe_ref(x, tok, w, offs, exps, counts, wi, wg, wo)
+        # three-kernel on the *real* inverse maps build_indices emitted
+        buf = permute_ops.permute(x, tok, use_pallas=True)
+        ys = gemm_ops.grouped_ffn_ragged(buf, offs, exps, counts, wi, wg,
+                                         wo, use_pallas=True)
+        unfused = permute_ops.unpermute(ys, inv_idx, inv_w, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 24), st.integers(1, 6))
+def test_fused_kernel_matches_ref_property(seed, T, cap):
+    """Random layouts/occupancies: kernel body == oracle."""
+    rng = np.random.default_rng(seed)
+    E, d, f = 3, 8, 8
+    offs = tuple(cap * i for i in range(2 * E + 1))
+    exps = tuple(list(range(E)) + list(range(E)))
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    wi, wg, wo = _weights(rng, E, d, f)
+    tok, w, valid = _slot_fixture(rng, T, offs, float(rng.uniform(0, 1)))
+    fused = fused_ops.local_moe(x, tok, w, offs, exps, valid, wi, wg, wo,
+                                use_pallas=True)
+    want = local_moe_ref(x, tok, w, offs, exps, valid, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP through expert_ffn_flat
+# ---------------------------------------------------------------------------
+
+
+def test_fused_vjp_through_expert_ffn_flat():
+    """Gradients through the fused expert_ffn_flat mode (kernel path) equal
+    jnp autodiff of the reference path — tokens, gate weights, and all
+    three expert weight tensors."""
+    rng = np.random.default_rng(3)
+    T, d, f, E = 16, 8, 12, 4
+    cfg = dispatch_lib.MoEConfig(d_model=d, d_ff=f, num_experts=E, top_k=2,
+                                 dtype=jnp.float32)
+    ep = dispatch_lib.EPSpec(num_pods=1, ep_per_pod=1, pod_axis=None,
+                             data_axis="data", model_axis=None)
+    offs = tuple(6 * e for e in range(E + 1))
+    exps = tuple(range(E))
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    wi, wg, wo = _weights(rng, E, d, f)
+    tok, w, valid = _slot_fixture(rng, T, offs, 0.6)
+
+    def loss(x_, w_, wi_, wg_, wo_, use_pallas):
+        params = {"w_in": wi_, "w_gate": wg_, "w_out": wo_}
+        y = dispatch_lib.expert_ffn_flat(
+            params, x_, offs, cfg, ep, seg_experts=exps, rows_valid=valid,
+            slot_to_token=tok, slot_w=w_, use_pallas=use_pallas)
+        return jnp.sum(y ** 2)
+
+    args = (x, w, wi, wg, wo)
+    g_k = jax.grad(lambda *a: loss(*a, True), range(5))(*args)
+    g_r = jax.grad(lambda *a: loss(*a, False), range(5))(*args)
+    for a, b, name in zip(g_k, g_r, ("x", "slot_w", "w_in", "w_gate",
+                                     "w_out")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-4, err_msg=name)
+        assert np.abs(np.asarray(a)).sum() > 0, name
+
+
+def test_unpermute_bwd_is_chunked_and_correct():
+    """The unpermute backward no longer materializes [T, K, d]: K chunked
+    scatter-adds give identical grads at K=4 (the grad-correctness pin for
+    the memory rewrite)."""
+    rng = np.random.default_rng(11)
+    T, S, K, d = 24, 40, 4, 16
+    y = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    _, inv_idx, inv_w = _random_maps(rng, T, S, K)
+
+    def via_pallas(y_, w_):
+        return jnp.sum(permute_ops._unpermute_pallas(y_, inv_idx, w_,
+                                                     True) ** 2)
+
+    def via_ref(y_, w_):
+        return jnp.sum(pr.unpermute_ref(y_, inv_idx, w_) ** 2)
+
+    gy_p, gw_p = jax.grad(via_pallas, (0, 1))(y, inv_w)
+    gy_r, gw_r = jax.grad(via_ref, (0, 1))(y, inv_w)
+    np.testing.assert_allclose(np.asarray(gy_p), np.asarray(gy_r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine with the fused path forced on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("a2a", {}),
+    ("a2a_pipelined", {"num_chunks": 3}),
+    ("gather", {}),
+])
+def test_engine_fused_matches_einsum_oracle(name, kw):
+    """Every path with the fused megakernel forced on == the einsum oracle
+    (on the unit test mesh every stage is local, so the a2a paths run
+    entirely through the fused kernel — no permute, no transport)."""
+    cfg, ep, gate_cfg, params, plan, x = _engine_setup()
+    y_or, _ = _engine_apply("einsum", params, x, cfg, ep, gate_cfg,
+                            capacity=x.shape[0])
+    needs_plan = name != "gather"
+    y, m = _engine_apply(name, params, x, cfg, ep, gate_cfg, use_pallas=True,
+                         **(dict(plan=plan) if needs_plan else {}), **kw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_or),
+                               atol=1e-4, rtol=1e-3)
+    assert set(m) == set(dispatch_lib.METRIC_KEYS)
+    # and fused == the unfused kernel-off engine, metrics included
+    y_off, m_off = _engine_apply(name, params, x, cfg, ep, gate_cfg,
+                                 use_pallas=False,
+                                 **(dict(plan=plan) if needs_plan else {}),
+                                 **kw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_off),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(float(m["dropped"]), float(m_off["dropped"]),
+                               atol=1e-6)
+
+
+def test_fused_a2a_path_emits_no_collectives_or_sorted_buffer():
+    """The structural pin on the tentpole: with the kernels on, a fully
+    local a2a engine call lowers with NO all_to_all and NO standalone
+    permute — the sorted [S, d] capacity buffer is never materialized.
+    With the kernels off the staged transport (and its all_to_all chain)
+    must still be there."""
+    cfg, ep, gate_cfg, params, plan, x = _engine_setup()
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    def jaxpr_for(use_pallas):
+        eng = dispatch_lib.make_engine("a2a", cfg=cfg, ep=ep,
+                                       gate_cfg=gate_cfg, plan=plan,
+                                       use_pallas=use_pallas)
+        fn = shard_map(lambda p, xx: eng(p, xx), mesh=mesh,
+                       in_specs=(P(), P()), out_specs=(P(), P()),
+                       check_vma=False)
+        with mesh:
+            return str(jax.make_jaxpr(fn)(params, x))
+
+    fused = jaxpr_for(True)
+    unfused = jaxpr_for(False)
+    assert "all_to_all" not in fused
+    assert "all_to_all" in unfused
+
+
+def test_engine_fused_grad_flows():
+    """Gate + expert grads are nonzero and finite end to end through the
+    fused megakernel's custom VJP."""
+    cfg, ep, gate_cfg, params, plan, x = _engine_setup(T=24)
+
+    def loss(p):
+        y, m = _engine_apply("a2a", p, x, cfg, ep, gate_cfg, plan=plan,
+                             use_pallas=True)
+        return jnp.sum(y ** 2) + m["aux_loss"]
+
+    g = jax.grad(loss)(params)
+    for k in ("w_in", "w_gate", "w_out"):
+        gk = np.asarray(g[k])
+        assert np.isfinite(gk).all() and np.abs(gk).sum() > 0, k
+    gg = np.asarray(g["gate"]["w"])
+    assert np.isfinite(gg).all() and np.abs(gg).sum() > 0

@@ -341,3 +341,81 @@ def test_mini_dryrun_8dev():
         print("MINI-DRYRUN-OK")
     """)
     assert "MINI-DRYRUN-OK" in out
+
+
+@pytest.mark.slow
+def test_fused_local_path_across_ranks_with_kernels_on():
+    """Kernels live (REPRO_KERNEL_INTERPRET=1) on real multi-rank meshes:
+    (a) on a 2x2 EP mesh no stage has an identity delivery chain, so the
+    fused megakernel must stay dormant and the staged a2a path must still
+    match the dense reference; (b) on a 2-pod mesh with a unit inner axis,
+    stage 0 fuses (local megakernel) while the pod stage keeps its a2a
+    chain — the two contributions must add back to the dense reference."""
+    out = _run(4, """
+        import os
+        os.environ["REPRO_KERNEL_INTERPRET"] = "1"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import dispatch as dispatch_lib, gating
+        from repro.core.capacity import make_plan
+        from repro.core.dispatch.transport import plan_stages
+
+        def dense_ref(params, x, N):
+            out = gating.gate_forward(params["gate"], x,
+                                      gate_cfg, None)
+            want = jnp.zeros_like(x)
+            for e in range(N):
+                h = (jax.nn.silu(x @ params["w_gate"][e])
+                     * (x @ params["w_in"][e]))
+                fe = h @ params["w_out"][e]
+                w = jnp.sum(jnp.where(out["topk_idx"] == e,
+                                      out["topk_weight"], 0.0), axis=1)
+                want = want + fe * w[:, None]
+            return want
+
+        D, F, N, K, T = 16, 32, 8, 2, 32   # T per rank
+        for shape, pods, per_pod in (((2, 2), 2, 2), ((2, 1), 2, 1)):
+            mesh = make_mesh(shape, ("pod", "data"))
+            ranks = shape[0] * shape[1]
+            cfg = dispatch_lib.MoEConfig(d_model=D, d_ff=F, num_experts=N,
+                                         top_k=K, capacity_factor=8.0,
+                                         dtype=jnp.float32)
+            ep = dispatch_lib.EPSpec(num_pods=pods, ep_per_pod=per_pod,
+                                     pod_axis="pod", data_axis="data",
+                                     model_axis=None)
+            gate_cfg = gating.GateConfig(num_experts=N, top_k=K,
+                                         aux_mode="lb")
+            params = dispatch_lib.init_moe_params(jax.random.PRNGKey(0),
+                                                  cfg, ep, gate_cfg)
+            plan = make_plan(tokens_per_device=T, num_experts=N, top_k=K,
+                             capacity_factor=8.0, num_pods=pods,
+                             ep_per_pod=per_pod, mode="even")
+            stages = plan_stages(plan, ep)
+            fusable = [s.num_dests == 1 for s in stages]
+            print("mesh", shape, "num_dests",
+                  [s.num_dests for s in stages])
+            # shape (2,2): nothing local; shape (2,1): stage 0 is
+            assert fusable == ([False, False] if shape == (2, 2)
+                               else [True, False]), fusable
+            x = jax.random.normal(jax.random.PRNGKey(1), (ranks * T, D),
+                                  jnp.float32)
+            eng = dispatch_lib.make_engine("a2a", cfg=cfg, ep=ep,
+                                           gate_cfg=gate_cfg, plan=plan,
+                                           use_pallas=None)
+            pspecs = {"gate": {"w": P()},
+                      "w_in": P(("pod", "data"), None, None),
+                      "w_gate": P(("pod", "data"), None, None),
+                      "w_out": P(("pod", "data"), None, None)}
+            fn = shard_map(lambda p, xx: eng(p, xx)[0], mesh=mesh,
+                           in_specs=(pspecs, P(("pod", "data"), None)),
+                           out_specs=P(("pod", "data"), None),
+                           check_vma=False)
+            with mesh:
+                y = fn(params, x)
+            err = float(jnp.abs(y - dense_ref(params, x, N)).max())
+            print("ERR", shape, err)
+            assert err < 1e-3, (shape, err)
+        print("FUSED-MULTIRANK-OK")
+    """)
+    assert "FUSED-MULTIRANK-OK" in out
