@@ -8,7 +8,8 @@ Checked references, all taken from backticked spans:
 - **paths** (contain ``/`` or end in a known source suffix): must exist
   relative to the repo root, after stripping an optional ``::member``
   suffix and any trailing punctuation.  Run-generated artifacts
-  (``BENCH_*.json``) are exempt — they are outputs, not sources.
+  (``BENCH_*.json``, ``analysis_report.json``) are exempt — they are
+  outputs, not sources.
 - **modules** (``repro.foo.bar`` / ``benchmarks.baz`` dotted names): the
   corresponding ``.py`` file (or package dir) must exist.
 - **flags** (``--foo-bar``): must appear literally somewhere under the
@@ -24,11 +25,12 @@ import os
 import re
 import sys
 
-DOC_FILES = ("README.md", "docs/architecture.md", "docs/serving.md")
+DOC_FILES = ("README.md", "docs/architecture.md", "docs/serving.md",
+             "docs/analysis.md")
 # trees searched for flag definitions/uses
 FLAG_TREES = ("src", "benchmarks", "examples", "tests", ".github", "results")
 PATH_SUFFIXES = (".py", ".md", ".json", ".yml", ".yaml", ".txt", ".toml")
-GENERATED = re.compile(r"^BENCH_\w+\.json$")
+GENERATED = re.compile(r"^(BENCH_\w+|analysis_report)\.json$")
 BACKTICK = re.compile(r"`([^`\n]+)`")
 MODULE = re.compile(r"^(repro|benchmarks|results)(\.\w+)+$")
 FLAG = re.compile(r"^--[a-z][a-z0-9-]*$")

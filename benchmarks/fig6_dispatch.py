@@ -33,7 +33,7 @@ def _train_gate(penalties, levels, N=8, d=32, steps=300, lr=0.3, seed=0):
         return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
 
     key = jax.random.PRNGKey(seed + 1)
-    for i in range(steps):
+    for _ in range(steps):
         key, sub = jax.random.split(key)
         params, l = step(params, sub)
     xe = jax.random.normal(jax.random.PRNGKey(99), (4096, d))

@@ -1,0 +1,67 @@
+"""Static contract checkers for the TA-MoE reproduction.
+
+TA-MoE's premise is that the dispatch pattern must match the topology —
+in this repo that means the *lowered* program must contain exactly the
+collective chain the Eq. (7) ``DispatchPlan`` promises, the Pallas
+kernels must honor the block-decomposition invariants their grids assume,
+and the source must go through the blessed entry points.  Three checkers
+enforce those contracts statically (no execution — CI runs them on a
+single CPU):
+
+* ``hlo_check``   — AOT-lowers the MoE step for every registered
+  dispatch path × topology and verifies the collective inventory
+  (op kinds, replica groups, payload shapes/dtypes) against the plan.
+* ``pallas_check``— walks the kernel registry
+  (``repro.kernels.backend.KERNEL_REGISTRY``) and checks VMEM
+  footprints, index-map bounds, ``plan_blocks`` divisor invariants, and
+  scatter-accumulation guards.
+* ``lint``        — an AST pass over ``src/`` for repo rules (raw
+  ``jax.shard_map``/``make_mesh`` outside ``repro/compat.py``, ``np.``
+  calls inside traced functions, jitted closures over mutable config).
+
+``python -m repro.analysis`` runs all three, emits a JSON report, and
+exits nonzero on violations; ``--fixture NAME`` runs a planted-violation
+fixture instead, proving the corresponding check fires (see
+``repro.analysis.fixtures``).  Contract details in ``docs/analysis.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract breach: which checker, which rule, where, and what."""
+
+    checker: str          # "hlo" | "pallas" | "lint"
+    rule: str             # stable rule id, e.g. "collective-inventory"
+    where: str            # scenario / kernel layout / file:line
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Report:
+    """Aggregated checker results, serialized as the CI artifact."""
+
+    violations: list[Violation] = dataclasses.field(default_factory=list)
+    checked: dict[str, list[str]] = dataclasses.field(default_factory=dict)
+
+    def extend(self, checker: str, items: list[Violation],
+               covered: list[str]) -> None:
+        self.violations.extend(items)
+        self.checked.setdefault(checker, []).extend(covered)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "violations": [v.to_dict() for v in self.violations],
+            "checked": self.checked,
+        }

@@ -1,0 +1,106 @@
+"""Planted-violation fixtures: each proves one checker actually fires.
+
+``python -m repro.analysis --fixture NAME`` runs one of these and exits
+nonzero when the corresponding check reports the planted violation (the
+CI lane and ``tests/test_analysis_checkers.py`` assert it does).  The
+fixtures live in their own package that the HEAD-lint scan and the
+kernel registry skip — they exist to be wrong.
+
+* ``collective_mismatch`` — verifies a real (2×2, kernels-on) a2a
+  lowering against an expectation with the counts chain dropped: the
+  inventory diff must flag the count exchange as unexpected traffic.
+* ``vmem_over_budget``    — a kernel layout whose blocks blow the VMEM
+  budget.
+* ``unguarded_scatter``   — the fused megakernel's scatter-revisit
+  pattern (constant output index map, non-trailing grid dimension)
+  *without* the accumulation guard.
+* ``raw_shard_map``       — a source file calling ``jax.shard_map`` /
+  ``jax.make_mesh`` outside ``repro/compat.py`` (plus the other two lint
+  rules' patterns).
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+
+def collective_mismatch():
+    from repro.analysis import hlo_check
+
+    sc = hlo_check.Scenario("fixture-collective-mismatch", (2, 2), "a2a",
+                            True)
+    tampered = [c for c in hlo_check.expected_inventory(sc)
+                if c.dtype != "i32"]
+    return hlo_check.verify(sc, expected=tampered)
+
+
+def vmem_over_budget():
+    from repro.analysis import pallas_check
+    from repro.kernels import backend
+
+    def _x_map(i, j):
+        return (i, 0)
+
+    # a [4096, 4096] f32 block is 64 MiB before double buffering
+    layout = backend.KernelLayout(
+        kernel="fixture.vmem_over_budget",
+        grid=(4, 2),
+        blocks=(
+            backend.BlockDecl("x", "in", 4, (4096, 4096), (16384, 4096),
+                              _x_map),
+            backend.BlockDecl("y", "out", 4, (4096, 4096), (16384, 4096),
+                              _x_map),
+        ),
+    )
+    violations, _ = pallas_check.run(layouts=[layout])
+    return violations
+
+
+def unguarded_scatter():
+    from repro.analysis import pallas_check
+    from repro.kernels import backend
+
+    def _in_map(b, j):
+        return (b, 0)
+
+    def _out_map(b, j):
+        # constant over the non-trailing b dimension — the fused
+        # megakernel's scatter pattern, minus its accumulation guard
+        return (0, 0)
+
+    layout = backend.KernelLayout(
+        kernel="fixture.unguarded_scatter",
+        grid=(4, 2),
+        blocks=(
+            backend.BlockDecl("x", "in", 4, (8, 16), (32, 16), _in_map),
+            backend.BlockDecl("o", "out", 4, (8, 16), (8, 16), _out_map,
+                              acc_guarded=False),
+        ),
+    )
+    violations, _ = pallas_check.run(layouts=[layout])
+    return violations
+
+
+def raw_shard_map():
+    from repro.analysis import lint
+
+    path = pathlib.Path(__file__).with_name("raw_shard_map_fixture.py")
+    return lint.lint_source(path.read_text(), str(path),
+                            "repro/analysis/fixtures/raw_shard_map_fixture.py")
+
+
+FIXTURES = {
+    "collective_mismatch": collective_mismatch,
+    "vmem_over_budget": vmem_over_budget,
+    "unguarded_scatter": unguarded_scatter,
+    "raw_shard_map": raw_shard_map,
+}
+
+
+def run_fixture(name: str):
+    try:
+        fn = FIXTURES[name]
+    except KeyError:
+        raise ValueError(f"unknown fixture {name!r}; "
+                         f"available: {sorted(FIXTURES)}") from None
+    return fn()

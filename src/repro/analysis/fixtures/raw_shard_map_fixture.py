@@ -1,0 +1,26 @@
+"""Planted lint violations — every rule in ``repro.analysis.lint`` has a
+specimen here.  This file is never imported; the fixture runner feeds its
+*source* to the linter (and the HEAD scan skips the fixtures package)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+MUTABLE_CFG = {"num_layers": 4}
+
+
+def bad_mesh_setup(devices):
+    # raw-shard-map: both entry points must go through repro.compat
+    mesh = jax.make_mesh((len(devices),), ("data",))
+    return jax.shard_map(lambda x: x, mesh=mesh)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def bad_traced_fn(n, x):
+    # np-in-traced: constant-folded at trace time
+    scale = np.sqrt(n)
+    # mutable-config-closure: retraces won't see later mutation
+    return x * scale * MUTABLE_CFG["num_layers"]

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 import jax.numpy as jnp
 
@@ -57,8 +56,8 @@ class ArchConfig:
     sliding_window: int = 0       # 0 = full attention
     qkv_bias: bool = False
     tie_embeddings: bool = False
-    moe: Optional[MoEArch] = None
-    mla: Optional[MLAArch] = None
+    moe: MoEArch | None = None
+    mla: MLAArch | None = None
     # hybrid (jamba): attention mixer at layer i when i % attn_every == attn_offset,
     # else the SSM mixer.  attn_every=1 -> pure attention.
     attn_every: int = 1
@@ -68,7 +67,7 @@ class ArchConfig:
     # encoder-decoder (whisper)
     enc_layers: int = 0
     # modality frontend stub: embeddings of shape [B, frontend_len, d_model]
-    frontend: Optional[str] = None  # "audio" | "vision"
+    frontend: str | None = None  # "audio" | "vision"
     frontend_len: int = 0
     dtype: str = "bfloat16"
     source: str = ""              # citation
@@ -96,7 +95,7 @@ class ArchConfig:
             return False          # enc-dec, bounded contexts
         return True               # dense/vlm: via sliding-window variant
 
-    def reduced(self) -> "ArchConfig":
+    def reduced(self) -> ArchConfig:
         """Smoke-test variant: same family/structure, tiny dims."""
         d = min(self.d_model, 256)
         heads = min(self.num_heads, 4)
@@ -160,7 +159,7 @@ class RunConfig:
     # CPU CI lane).  True forces the kernels — on CPU that means the slow
     # Pallas *interpreter*, so True is for validation, not CPU speed;
     # False forces the jnp reference everywhere.
-    use_pallas: Optional[bool] = None
+    use_pallas: bool | None = None
     # Nested topology spec in the paper's Fig. 2 notation, e.g.
     # ((2, 2), (2, 2)) for a 3-tier pod x node x data hierarchy of 8
     # devices.  Empty = take the hierarchy from the mesh the caller built.

@@ -19,7 +19,6 @@ axes; see engine.py for the path contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,9 +40,9 @@ class EPSpec:
     """
     num_pods: int                 # pods over which experts span (1 = no pod span)
     ep_per_pod: int               # "data"-axis size
-    pod_axis: Optional[str]       # mesh axis name, None when experts don't span pods
+    pod_axis: str | None       # mesh axis name, None when experts don't span pods
     data_axis: str
-    model_axis: Optional[str]     # tensor-parallel axis for d_ff
+    model_axis: str | None     # tensor-parallel axis for d_ff
     hierarchy: tuple = ()         # ((axis_name, size), ...) outermost-first
 
     def __post_init__(self):
@@ -56,7 +55,7 @@ class EPSpec:
             object.__setattr__(self, "hierarchy", h)
 
     @classmethod
-    def from_axes(cls, axis_names, axis_sizes, model_axis=None) -> "EPSpec":
+    def from_axes(cls, axis_names, axis_sizes, model_axis=None) -> EPSpec:
         """Build an N-level spec; the legacy fields become the 2-level
         summary (outer axes collapsed into ``num_pods``)."""
         names = tuple(axis_names)

@@ -32,7 +32,7 @@ cross-path outputs comparable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -98,14 +98,14 @@ class DispatchEngine:
     cfg: MoEConfig
     ep: EPSpec
     gate_cfg: gating.GateConfig
-    plan: Optional[DispatchPlan] = None
+    plan: DispatchPlan | None = None
     num_chunks: int = 1               # a2a_pipelined schedule depth
-    capacity: Optional[int] = None    # einsum buffer capacity (None = cf rule)
+    capacity: int | None = None    # einsum buffer capacity (None = cf rule)
     tokens_replicated: bool = False   # gather: tokens already on every rank
     # Token-permutation implementation for the dispatch/combine hot path:
     # None = auto (Pallas kernels on TPU/GPU, the jnp reference elsewhere);
     # True/False force it.  See repro.kernels.moe_permute.ops.
-    use_pallas: Optional[bool] = None
+    use_pallas: bool | None = None
 
     @property
     def name(self) -> str:
@@ -137,10 +137,10 @@ class DispatchEngine:
 
 def make_engine(name: str, *, cfg: MoEConfig, ep: EPSpec,
                 gate_cfg: gating.GateConfig,
-                plan: Optional[DispatchPlan] = None, num_chunks: int = 1,
-                capacity: Optional[int] = None,
+                plan: DispatchPlan | None = None, num_chunks: int = 1,
+                capacity: int | None = None,
                 tokens_replicated: bool = False,
-                use_pallas: Optional[bool] = None) -> DispatchEngine:
+                use_pallas: bool | None = None) -> DispatchEngine:
     """Resolve ``name`` against the registry and bind the static config."""
     path = get_path(name)
     if path.needs_plan and plan is None:
@@ -244,7 +244,7 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
             tuple((stage.index, sel) for stage, sel in local_work),
             topk_idx, T)
         offs, exps = [0], []
-        for stage, sel in local_work:
+        for _stage, sel in local_work:
             width = sel.idx.shape[-1]
             for e in range(E_l):
                 offs.append(offs[-1] + width)

@@ -31,7 +31,7 @@ gather each way.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,8 +46,8 @@ class Selection(NamedTuple):
     w: jnp.ndarray
     idx: jnp.ndarray
     valid: jnp.ndarray
-    buf: Optional[jnp.ndarray] = None
-    eid: Optional[jnp.ndarray] = None
+    buf: jnp.ndarray | None = None
+    eid: jnp.ndarray | None = None
 
 
 class Routing(NamedTuple):
@@ -233,7 +233,7 @@ class DispatchIndices(NamedTuple):
     inv_idx: jnp.ndarray          # [T, K] int32, sentinel S
     inv_w: jnp.ndarray            # [T, K] f32, 0 for dropped picks
     shapes: tuple                 # ((stage_idx, idx_shape), ...)
-    rows_per_expert: Optional[jnp.ndarray] = None   # [num segments] int32
+    rows_per_expert: jnp.ndarray | None = None   # [num segments] int32
 
     @property
     def num_slots(self) -> int:

@@ -8,7 +8,6 @@ the expert-parallel mesh axes; callers psum/pmean the returned metrics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +72,7 @@ def expert_levels(num_experts: int, experts_per_rank: int, ep_per_pod: int,
                             (ep_per_pod,), (my_data,))
 
 
-def gate_forward(params, x, cfg: GateConfig, levels: Optional[jnp.ndarray]):
+def gate_forward(params, x, cfg: GateConfig, levels: jnp.ndarray | None):
     """Compute router probabilities and top-k selection.
 
     x: [T, d] local tokens. Returns dict with probs [T, N], topk_idx [T, k],
@@ -118,7 +117,7 @@ def frac_by_level(frac, levels, num_stages: int) -> jnp.ndarray:
 
 
 def aux_loss(gate_out, cfg: GateConfig,
-             levels: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+             levels: jnp.ndarray | None = None) -> jnp.ndarray:
     """Auxiliary loss for this shard's tokens.
 
     lb (Eq. 1):  l_aux  = N * sum_e m_e * f_e
@@ -141,7 +140,7 @@ def aux_loss(gate_out, cfg: GateConfig,
 
 
 def ta_penalties(ratios: tuple, norm: str = "sum",
-                 level_sizes: Optional[tuple] = None) -> tuple:
+                 level_sizes: tuple | None = None) -> tuple:
     """Per-level penalty weights p_l = Norm(1/c_hat_l) (Eq. 8).
 
     ``ratios`` are the per-level capacity multipliers from

@@ -19,7 +19,6 @@ its deprecated 2-level aliases.
 from __future__ import annotations
 
 import warnings
-from typing import Optional
 
 from repro.core import dispatch as _dispatch
 from repro.core.dispatch import (          # noqa: F401  (re-exports)
@@ -74,7 +73,7 @@ def moe_apply_gather(params, x, cfg, ep, gate_cfg,
 
 
 def moe_apply_einsum(params, x, cfg, ep, gate_cfg,
-                     capacity: Optional[int] = None):
+                     capacity: int | None = None):
     """GShard/DeepSpeed einsum baseline (paper §2)."""
     _deprecated("moe_apply_einsum", "einsum")
     return _dispatch.dispatch_moe("einsum", params, x, cfg=cfg, ep=ep,

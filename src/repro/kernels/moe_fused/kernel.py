@@ -42,10 +42,28 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
 from repro.kernels.moe_gemm.kernel import _ffn_body
+
+
+# BlockSpec index maps, named so the analyzer layout (bottom of file)
+# evaluates the exact functions the pallas_call uses.
+
+def _resident_map(b, j, tok, w, row, eid, nv):
+    # whole-array block, resident across the entire grid
+    return (0, 0)
+
+
+def _fused_win_map(b, j, tok, w, row, eid, nv):
+    return (eid[b], 0, j)
+
+
+def _fused_wout_map(b, j, tok, w, row, eid, nv):
+    return (eid[b], j, 0)
 
 
 def _fused_kernel(tok_ref, w_ref, row_ref, eid_ref, nvalid_ref,
@@ -122,19 +140,14 @@ def local_moe_pallas(x_padded, slot_to_token, slot_w, block_row, block_eid,
         grid=(nb, nf),
         in_specs=[
             # whole token buffer resident across the grid
-            pl.BlockSpec((T + 1, d),
-                         lambda b, j, tok, w, row, eid, nv: (0, 0)),
-            pl.BlockSpec((1, d, bf),
-                         lambda b, j, tok, w, row, eid, nv: (eid[b], 0, j)),
-            pl.BlockSpec((1, d, bf),
-                         lambda b, j, tok, w, row, eid, nv: (eid[b], 0, j)),
-            pl.BlockSpec((1, bf, d),
-                         lambda b, j, tok, w, row, eid, nv: (eid[b], j, 0)),
+            pl.BlockSpec((T + 1, d), _resident_map),
+            pl.BlockSpec((1, d, bf), _fused_win_map),
+            pl.BlockSpec((1, d, bf), _fused_win_map),
+            pl.BlockSpec((1, bf, d), _fused_wout_map),
         ],
         # whole combined output resident: row blocks of the same token
         # accumulate into it across the sequential grid
-        out_specs=pl.BlockSpec((T, d),
-                               lambda b, j, tok, w, row, eid, nv: (0, 0)),
+        out_specs=pl.BlockSpec((T, d), _resident_map),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32),
                         pltpu.VMEM((bc, d), x_padded.dtype)],
     )
@@ -147,3 +160,53 @@ def local_moe_pallas(x_padded, slot_to_token, slot_w, block_row, block_eid,
         interpret=interpret,
     )(slot_to_token, slot_w.astype(jnp.float32), block_row, block_eid,
       block_nvalid, x_padded, w_in, w_gate, w_out)
+
+
+# ---------------------------------------------------------------------------
+# analyzer layout (repro.analysis.pallas_check)
+# ---------------------------------------------------------------------------
+
+
+@backend.register_kernel("moe_fused.local_moe")
+def _fused_layouts():
+    """Canonical fused-megakernel layout.  The [T, d] output block is
+    revisited by *every* row block (its index map is constant while the
+    non-trailing grid dimension b varies) — the exact scatter-revisit
+    pattern the analyzer requires ``acc_guarded`` for; the kernel earns
+    the flag with its ``(b == 0) & (j == 0)`` zero-init plus ``+=``
+    scatter epilogue."""
+    from repro.kernels.moe_gemm import ops
+
+    E, T, d, f = 4, 128, 128, 512
+    bf = 256
+    seg_offsets = np.asarray([0, 128, 192, 320, 384], np.int32)
+    seg_experts = np.arange(E, dtype=np.int32)
+    bc, brow, beid, bseg, bloc = ops.plan_blocks(seg_offsets, seg_experts,
+                                                 block_c=128)
+    S = int(seg_offsets[-1])
+    tok = np.arange(S, dtype=np.int32) % (T + 1)   # values in [0, T]
+    slot_w = np.ones(S, np.float32)
+    nv = np.full(brow.shape, bc, np.int32)
+    grid = (brow.shape[0], f // bf)
+    return [backend.KernelLayout(
+        kernel="moe_fused.local_moe",
+        grid=grid,
+        prefetch=(tok, slot_w, brow, beid, nv),
+        blocks=(
+            backend.BlockDecl("x_padded", "in", 4, (T + 1, d), (T + 1, d),
+                              _resident_map),
+            backend.BlockDecl("w_in", "in", 4, (1, d, bf), (E, d, f),
+                              _fused_win_map),
+            backend.BlockDecl("w_gate", "in", 4, (1, d, bf), (E, d, f),
+                              _fused_win_map),
+            backend.BlockDecl("w_out", "in", 4, (1, bf, d), (E, f, d),
+                              _fused_wout_map),
+            backend.BlockDecl("o", "out", 4, (T, d), (T, d), _resident_map,
+                              acc_guarded=True),
+            backend.BlockDecl("acc", "scratch", 4, (bc, d)),
+            backend.BlockDecl("xblk", "scratch", 4, (bc, d)),
+        ),
+        meta={"block_c": int(bc), "seg_offsets": seg_offsets,
+              "seg_experts": seg_experts, "block_seg": bseg,
+              "block_loc": bloc},
+    )]

@@ -42,10 +42,40 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend
 from repro.kernels.moe_gemm.ref import grouped_ffn_ref
+
+
+# BlockSpec index maps, named so the analyzer's registered layouts (see
+# ``_registry_layouts`` below) evaluate the *same* functions the
+# pallas_calls use — the declaration cannot drift from the kernel.
+
+def _dense_x_map(e, i, j):
+    return (e, i, 0)
+
+
+def _dense_win_map(e, i, j):
+    return (e, 0, j)
+
+
+def _dense_wout_map(e, i, j):
+    return (e, j, 0)
+
+
+def _ragged_row_map(b, j, row, eid, nv):
+    return (row[b], 0)
+
+
+def _ragged_win_map(b, j, row, eid, nv):
+    return (eid[b], 0, j)
+
+
+def _ragged_wout_map(b, j, row, eid, nv):
+    return (eid[b], j, 0)
 
 
 def _ffn_body(x, win_ref, wgate_ref, wout_ref, *, activation: str):
@@ -96,12 +126,12 @@ def _grouped_ffn_call(x, w_in, w_gate, w_out, activation, block_c, block_f,
         kernel,
         grid=(E, nc, nf),
         in_specs=[
-            pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
-            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
-            pl.BlockSpec((1, d, bf), lambda e, i, j: (e, 0, j)),
-            pl.BlockSpec((1, bf, d), lambda e, i, j: (e, j, 0)),
+            pl.BlockSpec((1, bc, d), _dense_x_map),
+            pl.BlockSpec((1, d, bf), _dense_win_map),
+            pl.BlockSpec((1, d, bf), _dense_win_map),
+            pl.BlockSpec((1, bf, d), _dense_wout_map),
         ],
-        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, j: (e, i, 0)),
+        out_specs=pl.BlockSpec((1, bc, d), _dense_x_map),
         out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
         interpret=interpret,
@@ -204,16 +234,12 @@ def grouped_ffn_ragged_pallas(x, block_row, block_eid, block_nvalid, w_in,
         num_scalar_prefetch=3,
         grid=(nb, nf),
         in_specs=[
-            pl.BlockSpec((bc, d), lambda b, j, row, eid, nv: (row[b], 0)),
-            pl.BlockSpec((1, d, bf),
-                         lambda b, j, row, eid, nv: (eid[b], 0, j)),
-            pl.BlockSpec((1, d, bf),
-                         lambda b, j, row, eid, nv: (eid[b], 0, j)),
-            pl.BlockSpec((1, bf, d),
-                         lambda b, j, row, eid, nv: (eid[b], j, 0)),
+            pl.BlockSpec((bc, d), _ragged_row_map),
+            pl.BlockSpec((1, d, bf), _ragged_win_map),
+            pl.BlockSpec((1, d, bf), _ragged_win_map),
+            pl.BlockSpec((1, bf, d), _ragged_wout_map),
         ],
-        out_specs=pl.BlockSpec((bc, d),
-                               lambda b, j, row, eid, nv: (row[b], 0)),
+        out_specs=pl.BlockSpec((bc, d), _ragged_row_map),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
     )
     kernel = functools.partial(_ragged_ffn_kernel, activation=activation)
@@ -223,3 +249,73 @@ def grouped_ffn_ragged_pallas(x, block_row, block_eid, block_nvalid, w_in,
         out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
         interpret=interpret,
     )(block_row, block_eid, block_nvalid, x, w_in, w_gate, w_out)
+
+
+# ---------------------------------------------------------------------------
+# analyzer layouts (repro.analysis.pallas_check)
+# ---------------------------------------------------------------------------
+
+
+@backend.register_kernel("moe_gemm.grouped_ffn")
+def _dense_layouts():
+    """Canonical dense grouped-FFN layout: grid (E, C/bc, F/bf), resident
+    f32 accumulator, f the trailing (sequential) dimension."""
+    E, C, d, f = 4, 256, 128, 512
+    bc, bf = 128, 256
+    grid = (E, C // bc, f // bf)
+    return [backend.KernelLayout(
+        kernel="moe_gemm.grouped_ffn",
+        grid=grid,
+        blocks=(
+            backend.BlockDecl("x", "in", 4, (1, bc, d), (E, C, d),
+                              _dense_x_map),
+            backend.BlockDecl("w_in", "in", 4, (1, d, bf), (E, d, f),
+                              _dense_win_map),
+            backend.BlockDecl("w_gate", "in", 4, (1, d, bf), (E, d, f),
+                              _dense_win_map),
+            backend.BlockDecl("w_out", "in", 4, (1, bf, d), (E, f, d),
+                              _dense_wout_map),
+            backend.BlockDecl("y", "out", 4, (1, bc, d), (E, C, d),
+                              _dense_x_map),
+            backend.BlockDecl("acc", "scratch", 4, (bc, d)),
+        ),
+    )]
+
+
+@backend.register_kernel("moe_gemm.grouped_ffn_ragged")
+def _ragged_layouts():
+    """Canonical ragged layout: the block vectors come from the real
+    ``ops.plan_blocks`` over a skewed segment table, so the analyzer
+    checks the very divisor invariants the kernel relies on."""
+    from repro.kernels.moe_gemm import ops  # circular at module scope
+
+    E, d, f = 4, 128, 512
+    bf = 256
+    seg_offsets = np.asarray([0, 256, 384, 640, 768], np.int32)
+    seg_experts = np.arange(E, dtype=np.int32)
+    bc, brow, beid, bseg, bloc = ops.plan_blocks(seg_offsets, seg_experts,
+                                                 block_c=128)
+    R = int(seg_offsets[-1])
+    nv = np.full(brow.shape, bc, np.int32)  # static stand-in (runtime value)
+    grid = (brow.shape[0], f // bf)
+    return [backend.KernelLayout(
+        kernel="moe_gemm.grouped_ffn_ragged",
+        grid=grid,
+        prefetch=(brow, beid, nv),
+        blocks=(
+            backend.BlockDecl("x", "in", 4, (bc, d), (R, d),
+                              _ragged_row_map),
+            backend.BlockDecl("w_in", "in", 4, (1, d, bf), (E, d, f),
+                              _ragged_win_map),
+            backend.BlockDecl("w_gate", "in", 4, (1, d, bf), (E, d, f),
+                              _ragged_win_map),
+            backend.BlockDecl("w_out", "in", 4, (1, bf, d), (E, f, d),
+                              _ragged_wout_map),
+            backend.BlockDecl("y", "out", 4, (bc, d), (R, d),
+                              _ragged_row_map),
+            backend.BlockDecl("acc", "scratch", 4, (bc, d)),
+        ),
+        meta={"block_c": int(bc), "seg_offsets": seg_offsets,
+              "seg_experts": seg_experts, "block_seg": bseg,
+              "block_loc": bloc},
+    )]

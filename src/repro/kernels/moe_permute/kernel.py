@@ -20,8 +20,30 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
+
+
+# BlockSpec index maps, named so the analyzer layouts (bottom of file)
+# evaluate the exact functions the pallas_calls use.
+
+def _permute_src_map(s, idx_ref):
+    return (idx_ref[s], 0)
+
+
+def _permute_dst_map(s, idx_ref):
+    return (s, 0)
+
+
+def _unpermute_src_map(t, k, idx_ref, w_ref):
+    return (idx_ref[t, k], 0)
+
+
+def _unpermute_dst_map(t, k, idx_ref, w_ref):
+    return (t, 0)
 
 
 def _permute_kernel(idx_ref, x_ref, o_ref):
@@ -37,8 +59,8 @@ def permute_pallas(x_padded, slot_to_token, *, interpret: bool = False):
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(S,),
-        in_specs=[pl.BlockSpec((1, d), lambda s, idx_ref: (idx_ref[s], 0))],
-        out_specs=pl.BlockSpec((1, d), lambda s, idx_ref: (s, 0)),
+        in_specs=[pl.BlockSpec((1, d), _permute_src_map)],
+        out_specs=pl.BlockSpec((1, d), _permute_dst_map),
     )
     return pl.pallas_call(
         _permute_kernel,
@@ -72,11 +94,8 @@ def unpermute_pallas(y_padded, inv_idx, inv_w, *, interpret: bool = False):
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,       # inv_idx, inv_w live in SMEM
         grid=(T, K),                 # K last => sequential accumulation
-        in_specs=[pl.BlockSpec((1, d),
-                               lambda t, k, idx_ref, w_ref: (idx_ref[t, k],
-                                                             0))],
-        out_specs=pl.BlockSpec((1, d),
-                               lambda t, k, idx_ref, w_ref: (t, 0)),
+        in_specs=[pl.BlockSpec((1, d), _unpermute_src_map)],
+        out_specs=pl.BlockSpec((1, d), _unpermute_dst_map),
     )
     return pl.pallas_call(
         _unpermute_kernel,
@@ -84,3 +103,45 @@ def unpermute_pallas(y_padded, inv_idx, inv_w, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
         interpret=interpret,
     )(inv_idx, inv_w.astype(jnp.float32), y_padded)
+
+
+# ---------------------------------------------------------------------------
+# analyzer layouts (repro.analysis.pallas_check)
+# ---------------------------------------------------------------------------
+
+
+@backend.register_kernel("moe_permute.permute")
+def _permute_layouts():
+    T, S, d = 96, 128, 128
+    idx = np.arange(S, dtype=np.int32) % (T + 1)   # values in [0, T]
+    return [backend.KernelLayout(
+        kernel="moe_permute.permute",
+        grid=(S,),
+        prefetch=(idx,),
+        blocks=(
+            backend.BlockDecl("x_padded", "in", 4, (1, d), (T + 1, d),
+                              _permute_src_map),
+            backend.BlockDecl("o", "out", 4, (1, d), (S, d),
+                              _permute_dst_map),
+        ),
+    )]
+
+
+@backend.register_kernel("moe_permute.unpermute")
+def _unpermute_layouts():
+    T, S, K, d = 96, 128, 2, 128
+    idx = (np.arange(T * K, dtype=np.int32) % (S + 1)).reshape(T, K)
+    w = np.ones((T, K), np.float32)
+    return [backend.KernelLayout(
+        kernel="moe_permute.unpermute",
+        grid=(T, K),
+        prefetch=(idx, w),
+        blocks=(
+            backend.BlockDecl("y_padded", "in", 4, (1, d), (S + 1, d),
+                              _unpermute_src_map),
+            # revisited across the trailing (sequential) K axis only —
+            # the resident accumulation the analyzer treats as safe
+            backend.BlockDecl("o", "out", 4, (1, d), (T, d),
+                              _unpermute_dst_map, acc_guarded=True),
+        ),
+    )]

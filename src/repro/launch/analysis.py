@@ -10,6 +10,7 @@ replica groups.  Wire-byte factors use standard ring/all-to-all costs.
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 
 import numpy as np
@@ -21,7 +22,10 @@ ICI_BW = 50e9                # bytes/s per link (approx. per-chip a2a bw)
 DCI_BW = 6.25e9              # bytes/s per chip, cross-pod
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s4": 0.5, "u4": 0.5,    # packed 4-bit: bytes are ceil'd per shape
+    "pred": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
     "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
     "f32": 4, "s32": 4, "u32": 4,
     "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
@@ -39,7 +43,11 @@ _PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
 
 
 def _shape_bytes(text: str) -> int:
-    """Sum byte sizes of every shape literal in a line's result portion."""
+    """Sum byte sizes of every shape literal in a line's result portion.
+
+    Handles arbitrarily nested tuple shapes — ``(f32[8,4], (s8[16],
+    u4[3]))`` — by summing every member, and sub-byte (4-bit) element
+    types, whose packed byte count is ceil'd per shape member."""
     total = 0
     for dt, dims in _SHAPE_RE.findall(text):
         if dt not in _DTYPE_BYTES:
@@ -48,7 +56,7 @@ def _shape_bytes(text: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += math.ceil(n * _DTYPE_BYTES[dt])
     return total
 
 

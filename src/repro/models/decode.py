@@ -208,8 +208,8 @@ def decode_step(params, cache, tokens, ctx: ModelCtx):
         # transformer.forward_features) and restack the per-group caches.
         new_gs = []
         for g in range(n_groups):
-            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
-            cg = jax.tree_util.tree_map(lambda a: a[g], cache["groups"])
+            pg = jax.tree_util.tree_map(lambda a, g=g: a[g], params["groups"])
+            cg = jax.tree_util.tree_map(lambda a, g=g: a[g], cache["groups"])
             for j, sub in enumerate(group):
                 x, cg[f"sub{j}"] = _decode_sublayer(
                     pg[f"sub{j}"], dict(cg[f"sub{j}"]), x, sub, ctx,
@@ -371,8 +371,8 @@ def prefill(params, batch, ctx: ModelCtx, *, cache_len: int, lens=None):
     if _overrides_hit_groups(ctx, n_prefix, group, n_groups, decode=True):
         new_gs = []
         for g in range(n_groups):
-            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
-            cg = jax.tree_util.tree_map(lambda a: a[g], cache["groups"])
+            pg = jax.tree_util.tree_map(lambda a, g=g: a[g], params["groups"])
+            cg = jax.tree_util.tree_map(lambda a, g=g: a[g], cache["groups"])
             for j, sub in enumerate(group):
                 x, cg[f"sub{j}"] = _prefill_sublayer(
                     pg[f"sub{j}"], dict(cg[f"sub{j}"]), x, sub, ctx, lens,

@@ -3,7 +3,6 @@ and ShapeDtypeStruct input specs for the multi-pod dry-run."""
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ def default_rules(mesh) -> sharding.AxisRules:
     }, mesh=mesh)
 
 
-def make_ep_spec(arch: ArchConfig, mesh) -> Optional[moe_base.EPSpec]:
+def make_ep_spec(arch: ArchConfig, mesh) -> moe_base.EPSpec | None:
     """EP hierarchy for one mesh: experts span the longest *suffix* of the
     non-model axes (innermost outward) whose extent divides the expert
     count — the whole hierarchy when possible, fewer tiers otherwise (the
@@ -53,7 +52,7 @@ def make_ep_spec(arch: ArchConfig, mesh) -> Optional[moe_base.EPSpec]:
 
 
 def make_plan(arch: ArchConfig, mesh, seq_len: int, global_batch: int,
-              mode: str) -> Optional[capacity.DispatchPlan]:
+              mode: str) -> capacity.DispatchPlan | None:
     if not arch.is_moe:
         return None
     ep = make_ep_spec(arch, mesh)
@@ -70,7 +69,7 @@ def make_plan(arch: ArchConfig, mesh, seq_len: int, global_batch: int,
 
 
 def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
-                  ) -> Optional[gating.GateConfig]:
+                  ) -> gating.GateConfig | None:
     if not arch.is_moe:
         return None
     n_levels = max(3, len(plan.ratios) if plan is not None else 3)
@@ -242,7 +241,7 @@ def _sds(shape, dtype, mesh, spec):
 
 
 def input_specs(arch: ArchConfig, shape_name: str, mesh,
-                ctx: Optional[transformer.ModelCtx] = None) -> dict:
+                ctx: transformer.ModelCtx | None = None) -> dict:
     """ShapeDtypeStruct pytree for every model input of this shape."""
     sh = INPUT_SHAPES[shape_name]
     B, S, kind = sh["global_batch"], sh["seq_len"], sh["kind"]

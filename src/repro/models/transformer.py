@@ -16,7 +16,6 @@ core/dispatch/); dense compute relies on pjit sharding constraints
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ from repro.models import xlstm as xlstm_lib
 @dataclasses.dataclass(frozen=True)
 class SubLayer:
     mixer: str                    # attn | mla | mamba | mlstm | slstm
-    ffn: Optional[str]            # mlp | moe | None
+    ffn: str | None            # mlp | moe | None
     cross: bool = False           # add cross-attention (whisper decoder)
     causal: bool = True
 
@@ -43,10 +42,10 @@ class SubLayer:
 class ModelCtx:
     """Everything the forward pass needs besides params and data."""
     arch: ArchConfig
-    mesh: Optional[object] = None
-    ep: Optional[moe_base.EPSpec] = None
-    plan: Optional[DispatchPlan] = None          # level-indexed a2a capacities
-    gate_cfg: Optional[gating.GateConfig] = None
+    mesh: object | None = None
+    ep: moe_base.EPSpec | None = None
+    plan: DispatchPlan | None = None          # level-indexed a2a capacities
+    gate_cfg: gating.GateConfig | None = None
     use_flash: bool = False
     use_moe_kernel: bool = False
     remat: bool = False
@@ -61,7 +60,7 @@ class ModelCtx:
     dispatch_override: tuple = ()
     # moe_permute token-permutation kernels in the dispatch hot path:
     # None = auto (Pallas on TPU/GPU, jnp reference elsewhere)
-    use_pallas: Optional[bool] = None
+    use_pallas: bool | None = None
     # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
     use_blockwise: bool = False                  # flash-style attention HLO
     fused_xent: bool = False                     # vocab-sharded xent
@@ -126,7 +125,7 @@ class ModelCtx:
             return self.ep.num_stages
         return 1
 
-    def dispatch_for_layer(self, layer_idx: Optional[int],
+    def dispatch_for_layer(self, layer_idx: int | None,
                            decode: bool = False) -> str:
         """Dispatch path name for one layer: the per-layer override when
         present, else the mode default (decode steps default to the
@@ -462,7 +461,7 @@ def forward_features(params, batch, ctx: ModelCtx):
             run_group = jax.checkpoint(run_group, static_argnums=(2,),
                                        prevent_cse=False)
         for g in range(n_groups):
-            pg = jax.tree_util.tree_map(lambda a: a[g], params["groups"])
+            pg = jax.tree_util.tree_map(lambda a, g=g: a[g], params["groups"])
             x, aux, frac = run_group((x, aux, frac), pg,
                                      n_prefix + g * len(group))
     else:

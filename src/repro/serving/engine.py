@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +79,7 @@ def make_decode_step(ctx: transformer.ModelCtx, dispatch_override=None):
 
 
 def make_prefill(ctx: transformer.ModelCtx, dispatch_override=None, *,
-                 with_cache: bool = False, cache_len: Optional[int] = None):
+                 with_cache: bool = False, cache_len: int | None = None):
     """Fused full-sequence prefill.
 
     Default (``with_cache=False``): ``prefill(params, batch) ->

@@ -15,7 +15,6 @@ import dataclasses
 import heapq
 import time
 from collections import deque
-from typing import Optional
 
 
 @dataclasses.dataclass
@@ -31,7 +30,7 @@ class Request:
     tokens: object
     max_new_tokens: int
     temperature: float = 0.0
-    frontend: Optional[object] = None
+    frontend: object | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -103,7 +102,7 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
-    def take(self, max_n: int, now: Optional[float] = None):
+    def take(self, max_n: int, now: float | None = None):
         """Admit up to ``max_n`` pending requests into free slots.
 
         Returns the admitted ``[(slot, request), ...]`` (possibly empty when
@@ -131,7 +130,7 @@ class Scheduler:
         stream.generated.append(int(token))
         return stream.done
 
-    def complete(self, slot: int, now: Optional[float] = None) -> Stream:
+    def complete(self, slot: int, now: float | None = None) -> Stream:
         """Evict the stream in ``slot``, free the slot for reuse, and
         return the finished stream."""
         stream = self._active.pop(slot)

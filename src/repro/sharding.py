@@ -11,7 +11,6 @@ from __future__ import annotations
 import contextlib
 import re
 import threading
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -25,7 +24,7 @@ class AxisRules:
         self.mapping = dict(mapping)
         self.mesh = mesh
 
-    def resolve(self, logical: Optional[str]):
+    def resolve(self, logical: str | None):
         if logical is None:
             return None
         return self.mapping.get(logical)
@@ -54,7 +53,7 @@ def hierarchy_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-def current_rules() -> Optional[AxisRules]:
+def current_rules() -> AxisRules | None:
     return getattr(_state, "rules", None)
 
 

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,7 @@ from repro.optim import adamw
 
 
 def make_train_step(ctx: transformer.ModelCtx, run: RunConfig,
-                    opt_cfg: Optional[adamw.AdamWConfig] = None):
+                    opt_cfg: adamw.AdamWConfig | None = None):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
     Pure function of its inputs — jit it (optionally with shardings).
@@ -96,9 +95,9 @@ class TrainResult:
 
 
 def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
-          aux_mode: Optional[str] = None, log_every: int = 10,
-          ckpt_path: Optional[str] = None, eval_fn=None,
-          data_seed: Optional[int] = None, verbose: bool = True
+          aux_mode: str | None = None, log_every: int = 10,
+          ckpt_path: str | None = None, eval_fn=None,
+          data_seed: int | None = None, verbose: bool = True
           ) -> TrainResult:
     """End-to-end training driver (used by examples + benchmarks).
 

@@ -15,6 +15,28 @@ class TestShapeBytes:
     def test_ignores_unknown_dtypes(self):
         assert analysis._shape_bytes("token[]") == 0
 
+    def test_low_precision_wire_dtypes(self):
+        # the quantized-wire dtypes: fp8 variants and 8-bit ints
+        assert analysis._shape_bytes("f8e4m3fn[32,16]") == 32 * 16
+        assert analysis._shape_bytes("f8e5m2fnuz[8]") == 8
+        assert analysis._shape_bytes("f8e4m3b11fnuz[4,4]") == 16
+        assert analysis._shape_bytes("s8[128]") == 128
+        assert analysis._shape_bytes("u8[64,2]") == 128
+
+    def test_packed_int4_rounds_up(self):
+        # 4-bit types pack two elements per byte, ceil'd per shape
+        assert analysis._shape_bytes("s4[8]") == 4
+        assert analysis._shape_bytes("u4[7]") == 4
+        assert analysis._shape_bytes("s4[1]") == 1
+
+    def test_nested_tuple_shapes(self):
+        text = "(f32[2,2], (s8[16], u4[6]), bf16[3])"
+        assert analysis._shape_bytes(text) == 16 + 16 + 3 + 6
+
+    def test_mixed_tuple_with_unknowns(self):
+        text = "(token[], f8e4m3fn[10], (u4[3]))"
+        assert analysis._shape_bytes(text) == 10 + 2
+
 
 class TestGroupParsing:
     def test_explicit_groups(self):

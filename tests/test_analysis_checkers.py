@@ -1,0 +1,251 @@
+"""Tests for the static contract checkers (repro.analysis).
+
+The collective-inventory tests are the fast lane the ISSUE asked for:
+every dispatch path is verified on a 2-level (2×2) and a 3-level (2×2×2)
+mesh via AOT **lowering only** — an abstract mesh needs no devices and
+nothing executes, so these run on the single-CPU unit-test rig.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis import fixtures, hlo_check, lint, pallas_check
+from repro.analysis.__main__ import main as analysis_main
+from repro.kernels import backend
+
+
+# ---------------------------------------------------------------------------
+# HLO collective verifier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["a2a", "a2a_pipelined", "gather", "einsum"])
+@pytest.mark.parametrize("axis_sizes", [(2, 2), (2, 2, 2)],
+                         ids=["2x2", "2x2x2"])
+def test_collective_inventory_all_paths_both_meshes(path, axis_sizes):
+    """All four dispatch paths on the 2-level and 3-level meshes, kernels
+    on: the lowered collective inventory matches the plan-derived
+    expectation exactly."""
+    sc = hlo_check.Scenario(f"{path}-{len(axis_sizes)}lvl", axis_sizes, path,
+                            True, num_chunks=2 if path == "a2a_pipelined"
+                            else 1)
+    assert hlo_check.verify(sc) == []
+
+
+def test_a2a_inventory_shape_2x2_kernels_on():
+    """Pin the expected inventory's *content* on the (2,2) mesh: stage 0
+    hops once, stage 1 twice; each hop carries dispatch + combine payload
+    a2a's in the wire dtype plus the int32 counts exchange."""
+    sc = hlo_check.Scenario("pin", (2, 2), "a2a", True)
+    exp = hlo_check.expected_inventory(sc)
+    assert len(exp) == 9  # (1 + 2) hops x (dispatch, combine, counts)
+    assert all(c.kind == "all_to_all" for c in exp)
+    assert sum(c.dtype == "i32" for c in exp) == 3
+    assert sum(c.dtype == "f32" for c in exp) == 6
+    # caps (16, 8), E_l = 4, d = 16: payload elements scale with the cap —
+    # stage 0 sends 2 dests x 4 experts x cap 16 over 1 hop, stage 1
+    # 4 x 4 x cap 8 over 2 hops (dispatch + combine each)
+    payloads = sorted(c.elements for c in exp if c.dtype == "f32")
+    assert payloads == [2 * 4 * 16 * 16] * 2 + [4 * 4 * 8 * 16] * 4
+
+
+def test_a2a_kernels_off_drops_counts_chain():
+    sc = hlo_check.Scenario("ref", (2, 2), "a2a", False)
+    exp = hlo_check.expected_inventory(sc)
+    assert len(exp) == 6 and not any(c.dtype == "i32" for c in exp)
+    assert hlo_check.verify(sc) == []
+
+
+def test_pipelined_inventory_scales_with_chunks():
+    one = hlo_check.expected_inventory(
+        hlo_check.Scenario("nc1", (2, 2), "a2a", True))
+    two = hlo_check.expected_inventory(
+        hlo_check.Scenario("nc2", (2, 2), "a2a_pipelined", True,
+                           num_chunks=2))
+    assert len(two) == 2 * len(one)
+    # chunked payloads halve per op; total wire bytes are conserved
+    tot = sum(c.elements for c in one if c.dtype == "f32")
+    assert sum(c.elements for c in two if c.dtype == "f32") == tot
+
+
+def test_gather_path_has_no_a2a():
+    exp = hlo_check.expected_inventory(
+        hlo_check.Scenario("g", (2, 2), "gather", False))
+    kinds = {c.kind for c in exp}
+    assert kinds == {"all_gather", "all_reduce"}
+
+
+def test_replica_groups_match_level_axes():
+    """The 3-level mesh's axis groups: innermost 'data' groups adjacent
+    ids, outermost 'pod' strides across the whole lower hierarchy."""
+    names, sizes = ("pod", "node", "data"), (2, 2, 2)
+    assert hlo_check.axis_groups(names, sizes, "data") == (
+        (0, 1), (2, 3), (4, 5), (6, 7))
+    assert hlo_check.axis_groups(names, sizes, "pod") == (
+        (0, 4), (1, 5), (2, 6), (3, 7))
+
+
+def test_parse_collectives_stablehlo_forms():
+    text = """
+      %5 = "stablehlo.all_to_all"(%4) <{concat_dimension = 0 : i64,
+      replica_groups = dense<[[0, 2], [1, 3]]> : tensor<2x2xi64>,
+      split_count = 2 : i64}> : (tensor<2x4x16xf32>) -> tensor<2x4x16xf32>
+    """.replace("\n      ", " ")
+    (c,) = hlo_check.parse_collectives(text)
+    assert c.kind == "all_to_all" and c.dtype == "f32"
+    assert c.elements == 2 * 4 * 16
+    assert c.groups == ((0, 2), (1, 3))
+
+
+def test_match_inventory_flags_both_directions():
+    a2a = hlo_check.Collective("all_to_all", "f32", 8, ((0, 1),))
+    missing = hlo_check.match_inventory("w", [a2a], [])
+    assert len(missing) == 1 and "missing" in missing[0].message
+    extra = hlo_check.match_inventory("w", [], [a2a])
+    assert len(extra) == 1 and "unexpected" in extra[0].message
+    assert hlo_check.match_inventory("w", [a2a], [a2a]) == []
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_registered_kernel_layouts_pass():
+    violations, covered = pallas_check.run()
+    assert violations == []
+    assert {"moe_gemm.grouped_ffn", "moe_gemm.grouped_ffn_ragged",
+            "moe_fused.local_moe", "moe_permute.permute",
+            "moe_permute.unpermute"} <= set(covered)
+
+
+def test_fused_layout_depends_on_acc_guard():
+    """The fused megakernel's declared layout is exactly the scatter-
+    revisit pattern: flipping its acc_guarded flag off must trip the
+    race check."""
+    (layout,) = backend.KERNEL_REGISTRY["moe_fused.local_moe"]()
+    blocks = tuple(dataclasses.replace(b, acc_guarded=False)
+                   if b.kind == "out" else b for b in layout.blocks)
+    bad = dataclasses.replace(layout, blocks=blocks)
+    assert any(v.rule == "scatter-race"
+               for v in pallas_check.check_layout(bad))
+
+
+def test_index_bounds_catches_oob_map():
+    def bad_map(i):
+        return (i + 1,)  # walks one block past the end
+
+    layout = backend.KernelLayout(
+        kernel="t", grid=(4,),
+        blocks=(backend.BlockDecl("x", "in", 4, (8,), (32,), bad_map),))
+    v = pallas_check.check_index_bounds(layout)
+    assert len(v) == 1 and v[0].rule == "index-bounds"
+
+
+def test_plan_blocks_invariants_catch_straddle():
+    import numpy as np
+
+    (layout,) = backend.KERNEL_REGISTRY["moe_gemm.grouped_ffn_ragged"]()
+    brow, beid, nv = layout.prefetch
+    # shift one block's row so it straddles a segment boundary
+    brow = np.array(brow)
+    brow[1] = brow[1] + 1000
+    bad = backend.KernelLayout(kernel=layout.kernel, grid=layout.grid,
+                               blocks=layout.blocks,
+                               prefetch=(brow, beid, nv), meta=layout.meta)
+    assert any(v.rule == "plan-blocks"
+               for v in pallas_check.check_plan_blocks(bad))
+
+
+# ---------------------------------------------------------------------------
+# repo-rule lint
+# ---------------------------------------------------------------------------
+
+
+def test_lint_clean_on_head():
+    violations, covered = lint.run()
+    assert violations == []
+    assert any(f.endswith("compat.py") for f in covered)
+
+
+def test_lint_rules_fire_on_fixture():
+    rules = {v.rule for v in fixtures.run_fixture("raw_shard_map")}
+    assert rules == {"raw-shard-map", "np-in-traced",
+                     "mutable-config-closure"}
+
+
+def test_lint_allows_compat_itself():
+    src = "import jax\nmesh = jax.make_mesh((2,), ('x',))\n"
+    assert lint.lint_source(src, "src/repro/compat.py") == []
+    assert lint.lint_source(src, "src/repro/other.py")
+
+
+# ---------------------------------------------------------------------------
+# fixtures + CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(fixtures.FIXTURES))
+def test_every_fixture_fires(name):
+    assert fixtures.run_fixture(name), f"fixture {name} reported nothing"
+
+
+@pytest.mark.parametrize("name", ["vmem_over_budget", "raw_shard_map"])
+def test_cli_exits_nonzero_on_fixture(name, capsys):
+    assert analysis_main(["--fixture", name]) == 1
+    capsys.readouterr()
+
+
+def test_cli_lint_lane_green_on_head(tmp_path, capsys):
+    import json
+
+    out = tmp_path / "report.json"
+    assert analysis_main(["--only", "lint", "--only", "pallas",
+                          "--json", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["ok"] and report["violations"] == []
+    assert set(report["checked"]) == {"lint", "pallas"}
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# strict REPRO_KERNEL_INTERPRET parsing (kernels/backend.py)
+# ---------------------------------------------------------------------------
+
+
+class TestKernelInterpretEnv:
+    def _with(self, value, monkeypatch):
+        if value is None:
+            monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+        else:
+            monkeypatch.setenv("REPRO_KERNEL_INTERPRET", value)
+
+    @pytest.mark.parametrize("value", ["1", "true", "TRUE", " 1 "])
+    def test_truthy(self, value, monkeypatch):
+        self._with(value, monkeypatch)
+        assert backend.env_interpret() is True
+        assert backend.want_pallas(None) is True
+
+    @pytest.mark.parametrize("value", ["0", "false", "False", " 0 "])
+    def test_falsy(self, value, monkeypatch):
+        self._with(value, monkeypatch)
+        assert backend.env_interpret() is False
+
+    def test_unset(self, monkeypatch):
+        self._with(None, monkeypatch)
+        assert backend.env_interpret() is False
+
+    @pytest.mark.parametrize("value", ["yes", "on", "2", ""])
+    def test_garbage_raises(self, value, monkeypatch):
+        self._with(value, monkeypatch)
+        with pytest.raises(ValueError, match="REPRO_KERNEL_INTERPRET"):
+            backend.env_interpret()
+        with pytest.raises(ValueError):
+            backend.want_pallas(None)
+
+    def test_explicit_flag_skips_env(self, monkeypatch):
+        # a forced use_pallas never consults the env var
+        self._with("garbage", monkeypatch)
+        assert backend.want_pallas(True) is True
+        assert backend.want_pallas(False) is False

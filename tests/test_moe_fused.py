@@ -18,9 +18,6 @@ try:
 except ImportError:                      # pragma: no cover - CI has hypothesis
     from _hypothesis_fallback import given, settings, strategies as st
 
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import make_mesh, shard_map
 from repro.core import dispatch as dispatch_lib
 from repro.core.capacity import make_dispatch_plan
 from repro.kernels.moe_fused import ops as fused_ops
@@ -281,28 +278,25 @@ def test_engine_fused_matches_einsum_oracle(name, kw):
 
 
 def test_fused_a2a_path_emits_no_collectives_or_sorted_buffer():
-    """The structural pin on the tentpole: with the kernels on, a fully
-    local a2a engine call lowers with NO all_to_all and NO standalone
-    permute — the sorted [S, d] capacity buffer is never materialized.
-    With the kernels off the staged transport (and its all_to_all chain)
-    must still be there."""
-    cfg, ep, gate_cfg, params, plan, x = _engine_setup()
-    mesh = make_mesh((1, 1), ("data", "model"))
+    """The structural pin on the tentpole, now enforced by the static
+    checker: with the kernels on, a fully local (unit-mesh) a2a engine
+    call must verify against an *empty* collective inventory — no
+    all_to_all, no staged transport at all.  With the kernels off the
+    staged chain must still be there (an empty expectation has to fail)."""
+    from repro.analysis import hlo_check
 
-    def jaxpr_for(use_pallas):
-        eng = dispatch_lib.make_engine("a2a", cfg=cfg, ep=ep,
-                                       gate_cfg=gate_cfg, plan=plan,
-                                       use_pallas=use_pallas)
-        fn = shard_map(lambda p, xx: eng(p, xx), mesh=mesh,
-                       in_specs=(P(), P()), out_specs=(P(), P()),
-                       check_vma=False)
-        with mesh:
-            return str(jax.make_jaxpr(fn)(params, x))
+    fused = hlo_check.Scenario("fused-unit-mesh", (1,), "a2a", True)
+    assert hlo_check.expected_inventory(fused) == []
+    assert hlo_check.verify(fused) == []
 
-    fused = jaxpr_for(True)
-    unfused = jaxpr_for(False)
-    assert "all_to_all" not in fused
-    assert "all_to_all" in unfused
+    # the checker is not vacuous: the same unit mesh at 2 ranks with the
+    # kernels off must carry the staged all_to_all chain again
+    unfused = hlo_check.Scenario("unfused-2rank", (2,), "a2a", False)
+    expected = hlo_check.expected_inventory(unfused)
+    assert any(c.kind == "all_to_all" for c in expected)
+    assert hlo_check.verify(unfused) == []
+    # and claiming the fused (empty) inventory for it must be rejected
+    assert hlo_check.verify(unfused, expected=[])
 
 
 def test_engine_fused_grad_flows():
