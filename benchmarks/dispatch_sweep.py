@@ -8,7 +8,11 @@ step-time trajectory the benchmark-regression CI lane guards: they land in
 Modes swept per path: ``off`` (jnp reference permutation) and ``auto``
 (the engine default — Pallas kernels on TPU/GPU, reference elsewhere, so
 on CPU CI the two columns coincide and the kernel speedup shows up on
-accelerator runners).  On TPU an explicit ``on`` mode is added.
+accelerator runners).  On TPU an explicit ``on`` mode is added.  The
+``a2a_wire-*`` rows run the same a2a engine under the registered wire
+codecs (bf16 cast, int8 quantize + quantized expert GEMMs), and the
+``dispatch_chunk_verdict_wire-*`` rows pin the comm-model chunk
+chooser's verdict under codec-scaled byte counts.
 
 Measurement discipline (shared CI runners are noisy): every configuration
 is compiled and warmed first, then timed in round-robin batches — one
@@ -99,6 +103,22 @@ def run(quick: bool = False):
             if name == "einsum" and mode != "off":
                 continue   # the oracle has no permutation kernels
             configs.append((f"{name}_pallas-{mode}", _make(name, flag)))
+
+    # wire_codec rows: the a2a engine with the registered wire codecs at
+    # matched shapes.  On the single-rank bench mesh the collectives are
+    # trivial, so these rows time the codec overhead itself (encode /
+    # scale / decode, plus the int8-quantized expert GEMMs) against the
+    # raw-wire "a2a_pallas-*" rows above.
+    import dataclasses as _dc
+    for codec in ("bf16", "int8"):
+        cfg_c = _dc.replace(cfg, wire_codec=codec)
+        eng_c = dispatch_lib.make_engine("a2a", cfg=cfg_c, ep=ep,
+                                         gate_cfg=gate_cfg, plan=plan,
+                                         use_pallas=None)
+        body_c = shard_map(lambda p, xx, _e=eng_c: _e(p, xx)[0], mesh=mesh,
+                           in_specs=(P(), P()), out_specs=P(),
+                           check_vma=False)
+        configs.append((f"a2a_wire-{codec}_pallas-auto", jax.jit(body_c)))
 
     # anchor rows: fixed pure-jnp workloads spelled out *here*, running no
     # repo code at all — benchmarks.compare estimates the machine-speed
@@ -302,4 +322,39 @@ def run(quick: bool = False):
             f"a2a diverged from the einsum oracle (max abs err {err:.2e}); "
             "refusing to report step times for broken dispatch math")
     rows.append(("dispatch_oracle_err", err * 1e6, f"max_abs_err={err:.2e}"))
+
+    # same discipline for the quantized wire: the int8-codec engine must
+    # stay within quantization noise of the raw-wire engine, or its
+    # step-time rows are meaningless
+    with mesh:
+        y_q = np.asarray(fns["a2a_wire-int8_pallas-auto"](params, x))
+    qerr = float(np.abs(y_q - y_a2a).max())
+    qref = max(float(np.abs(y_a2a).max()), 1.0)
+    print(f"# int8-wire vs raw-wire a2a max err: {qerr:.2e} "
+          f"(ref magnitude {qref:.2e})")
+    if qerr > 0.08 * qref:
+        raise RuntimeError(
+            f"int8 wire codec diverged from the raw-wire engine "
+            f"(max abs err {qerr:.2e} vs ref {qref:.2e}); refusing to "
+            "report step times for broken quantization")
+
+    # chunk-chooser verdicts from codec-scaled byte counts, at a
+    # production-ish shape where the bf16 -> int8 swap flips the verdict
+    # (deterministic model output, so the compare gate pins it exactly)
+    from repro.core import comm_model
+    from repro.core.capacity import make_dispatch_plan
+    vplan = make_dispatch_plan(tokens_per_device=512, num_experts=32,
+                               top_k=2, capacity_factor=2.0,
+                               axis_sizes=(4, 8), mode="ta")
+    for codec in ("bf16", "int8"):
+        terms = comm_model.moe_overlap_terms(vplan, d_model=1024, d_ff=2048,
+                                             bytes_per_el=2, codec=codec)
+        pick = comm_model.choose_num_chunks(
+            t_exchange=terms["t_exchange"], t_compute=terms["t_compute"],
+            alpha=terms["alpha"])
+        print(f"# chunk-chooser verdict (wire={codec}): num_chunks={pick} "
+              f"t_exchange={terms['t_exchange']*1e6:.2f}us")
+        rows.append((f"dispatch_chunk_verdict_wire-{codec}", float(pick),
+                     f"t_exchange_us={terms['t_exchange']*1e6:.2f};"
+                     f"E=32;T=512;mesh=4x8;d=1024;f=2048"))
     return rows

@@ -108,6 +108,19 @@ def sweep(axis_sizes, T=256, D=64, F=128, N=16, K=2):
     rows.append((f"fig_overlap_auto_chunks{suffix}", float(auto),
                  f"model choice;topology={topo_tag}"))
 
+    # quantized wire: rerun the chunk chooser on int8-codec byte counts
+    # (1-byte payload + f32 scale sideband) — the codec swap must be
+    # visible in the chooser's inputs, and often in its verdict
+    qterms = comm_model.moe_overlap_terms(base_plan, d_model=D, d_ff=F,
+                                          bytes_per_el=4, codec="int8")
+    q_auto = comm_model.choose_num_chunks(**qterms)
+    print(f"# comm-model pick (int8 wire codec): num_chunks={q_auto} "
+          f"(t_exchange {terms['t_exchange']*1e6:.2f}us -> "
+          f"{qterms['t_exchange']*1e6:.2f}us)")
+    rows.append((f"fig_overlap_auto_chunks_int8{suffix}", float(q_auto),
+                 f"t_exchange_us={qterms['t_exchange']*1e6:.2f};"
+                 f"topology={topo_tag}"))
+
     # measured alpha/beta: micro-benchmark every mesh axis and rerun the
     # chunk chooser on the fitted terms (level-indexed links)
     links = comm_model.measured_ep_links(mesh, ep.axis_names)

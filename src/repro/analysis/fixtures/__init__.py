@@ -9,6 +9,10 @@ kernel registry skip — they exist to be wrong.
 * ``collective_mismatch`` — verifies a real (2×2, kernels-on) a2a
   lowering against an expectation with the counts chain dropped: the
   inventory diff must flag the count exchange as unexpected traffic.
+* ``missing_scale_exchange`` — verifies a real int8-wire (2×2,
+  kernels-on) lowering against an expectation with the f32 scale
+  sideband dropped: the diff must flag the scale exchanges the scaled
+  codec actually put on the wire.
 * ``vmem_over_budget``    — a kernel layout whose blocks blow the VMEM
   budget.
 * ``unguarded_scatter``   — the fused megakernel's scatter-revisit
@@ -31,6 +35,16 @@ def collective_mismatch():
                             True)
     tampered = [c for c in hlo_check.expected_inventory(sc)
                 if c.dtype != "i32"]
+    return hlo_check.verify(sc, expected=tampered)
+
+
+def missing_scale_exchange():
+    from repro.analysis import hlo_check
+
+    sc = hlo_check.Scenario("fixture-missing-scale-exchange", (2, 2), "a2a",
+                            True, wire_codec="int8")
+    tampered = [c for c in hlo_check.expected_inventory(sc)
+                if c.dtype != "f32"]
     return hlo_check.verify(sc, expected=tampered)
 
 
@@ -91,6 +105,7 @@ def raw_shard_map():
 
 FIXTURES = {
     "collective_mismatch": collective_mismatch,
+    "missing_scale_exchange": missing_scale_exchange,
     "vmem_over_budget": vmem_over_budget,
     "unguarded_scatter": unguarded_scatter,
     "raw_shard_map": raw_shard_map,

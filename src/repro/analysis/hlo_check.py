@@ -9,10 +9,14 @@ asserts the inventory matches what the Eq. (7) ``DispatchPlan`` promises:
   over its ``s+1`` delivery axes, each hop's ``replica_groups`` exactly
   the device groups of that mesh axis;
 * per-hop payloads of ``num_dests × E_l × cap_chunk × d`` elements in
-  the **wire dtype** (``MoEConfig.a2a_dtype``), i.e. wire bytes scale
-  with the plan's caps — and with the chunk count on the pipelined path;
+  the **wire dtype** (the resolved ``MoEConfig.wire_codec``), i.e. wire
+  bytes scale with the plan's caps — and with the chunk count on the
+  pipelined path;
 * the valid-count exchange riding the same chain (int32, no wire cast)
   exactly when the occupancy-aware ragged GEMM is active;
+* for **scaled** wire codecs (int8 / fp8e4m3), the per-segment f32
+  scale sideband riding the same chain — one scale exchange per payload
+  exchange, ``num_dests × E_l`` f32 elements each, dispatch and combine;
 * **no** unaccounted collective anywhere in the step — stray
   all-gathers / reshards in the hot path are inventory violations, and
   the fused unit-mesh path must lower to **zero** collectives
@@ -41,7 +45,7 @@ _AXIS_NAMES = {1: ("data",), 2: ("pod", "data"), 3: ("pod", "node", "data")}
 
 # jnp dtype name -> StableHLO element type
 _HLO_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
-              "int32": "i32", "float8_e4m3fn": "f8E4M3FN",
+              "int32": "i32", "int8": "i8", "float8_e4m3fn": "f8E4M3FN",
               "float8_e5m2": "f8E5M2"}
 
 
@@ -55,7 +59,9 @@ class Scenario:
     path: str
     use_pallas: bool
     num_chunks: int = 1
-    a2a_dtype: str = ""
+    a2a_dtype: str = ""           # deprecated cast-only wire (kept for the
+                                  # alias coverage); prefer wire_codec
+    wire_codec: str = ""          # registered codec name in dispatch.wire
     tokens: int = 32
     num_experts: int = 16
     d_model: int = 16
@@ -71,7 +77,8 @@ class Scenario:
 def default_scenarios() -> tuple:
     """All four dispatch paths on the 2-level (2×2) and 3-level (2×2×2)
     meshes, kernels on and off, plus the pipelined chunking, the fused
-    unit-mesh zero-collective pin, and a quantized-wire variant."""
+    unit-mesh zero-collective pin, a cast-wire variant, and the scaled
+    (int8 / fp8e4m3) wire-codec variants with their scale sidebands."""
     return (
         Scenario("a2a-2x2-ref", (2, 2), "a2a", False),
         Scenario("a2a-2x2-kernels", (2, 2), "a2a", True),
@@ -89,6 +96,10 @@ def default_scenarios() -> tuple:
         Scenario("a2a-unit-mesh-fused", (1,), "a2a", True),
         Scenario("a2a-2x2-wire-bf16", (2, 2), "a2a", True,
                  a2a_dtype="bfloat16"),
+        Scenario("a2a-2x2-wire-int8", (2, 2), "a2a", True,
+                 wire_codec="int8"),
+        Scenario("a2a-2x2x2-wire-fp8e4m3", (2, 2, 2), "a2a", True,
+                 wire_codec="fp8e4m3"),
     )
 
 
@@ -130,6 +141,20 @@ def axis_groups(names, sizes, axis) -> tuple:
 # ---------------------------------------------------------------------------
 
 
+def _scenario_codec(sc: Scenario):
+    """Resolve the scenario's wire codec the way MoEConfig does: the
+    first-class ``wire_codec`` name wins, the deprecated ``a2a_dtype``
+    falls back to a cast-only codec (no warning here — the analysis lane
+    exercises the alias deliberately)."""
+    from repro.core.dispatch import wire as wire_lib
+
+    if sc.wire_codec:
+        return wire_lib.get_codec(sc.wire_codec)
+    if sc.a2a_dtype:
+        return wire_lib.cast_codec(sc.a2a_dtype)
+    return None
+
+
 def expected_inventory(sc: Scenario) -> list:
     from repro.core import dispatch as dispatch_lib
     from repro.core.capacity import make_dispatch_plan
@@ -164,7 +189,9 @@ def expected_inventory(sc: Scenario) -> list:
     stages = transport.plan_stages(plan, ep)
     fused_on = fused_ops.use_fused(sc.use_pallas)
     ragged = gemm_ops.use_ragged(sc.use_pallas)
-    wire = _HLO_DTYPE[sc.a2a_dtype or "float32"]
+    codec = _scenario_codec(sc)
+    wire = _HLO_DTYPE[str(codec.wire_dtype) if codec else "float32"]
+    scaled = codec is not None and codec.scaled
     nc = max(1, sc.num_chunks)
 
     exp = []
@@ -182,11 +209,18 @@ def expected_inventory(sc: Scenario) -> list:
             if size == 1:
                 continue  # trivial hop: jax lowers it away
             for _ in range(nc):
-                # dispatch hop + combine hop, both wire-cast
+                # dispatch hop + combine hop, both in the wire dtype
                 exp.append(Collective("all_to_all", wire, payload,
                                       groups_of[ax]))
                 exp.append(Collective("all_to_all", wire, payload,
                                       groups_of[ax]))
+                if scaled:
+                    # per-segment f32 scale sideband: one exchange per
+                    # payload exchange, shaped like the count tensor
+                    exp.append(Collective("all_to_all", "f32", counts,
+                                          groups_of[ax]))
+                    exp.append(Collective("all_to_all", "f32", counts,
+                                          groups_of[ax]))
                 if ragged:
                     # valid-count exchange rides the same chain, exact i32
                     exp.append(Collective("all_to_all", "i32", counts,
@@ -219,7 +253,7 @@ def lower_scenario(sc: Scenario) -> str:
     ep_world = math.prod(sc.axis_sizes)
     cfg = dispatch_lib.MoEConfig(d_model=d, d_ff=sc.d_ff, num_experts=N,
                                  top_k=sc.top_k, dtype=jnp.float32,
-                                 a2a_dtype=sc.a2a_dtype)
+                                 wire_codec=_scenario_codec(sc))
     ep = dispatch_lib.EPSpec.from_axes(names, sc.axis_sizes, model_axis=None)
     gate_cfg = gating.GateConfig(num_experts=N, top_k=sc.top_k,
                                  aux_mode="lb")

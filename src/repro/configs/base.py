@@ -160,6 +160,12 @@ class RunConfig:
     # Pallas *interpreter*, so True is for validation, not CPU speed;
     # False forces the jnp reference everywhere.
     use_pallas: bool | None = None
+    # MoE a2a wire codec, a registered name in core.dispatch.wire.CODECS
+    # ("bf16" | "int8" | "fp8e4m3"; "" = raw model-dtype wire).  Scaled
+    # codecs move int8/fp8 payloads with a per-segment f32 scale sideband
+    # riding the same collective chain; "int8" additionally runs the
+    # delivered rows' up-projection GEMMs in int8 (i32 accumulate).
+    wire_codec: str = ""
     # Nested topology spec in the paper's Fig. 2 notation, e.g.
     # ((2, 2), (2, 2)) for a 3-tier pod x node x data hierarchy of 8
     # devices.  Empty = take the hierarchy from the mesh the caller built.

@@ -249,7 +249,7 @@ def align_to_chunks(plan: DispatchPlan, num_chunks: int) -> DispatchPlan:
 
 
 def a2a_bytes(plan: DispatchPlan, d_model: int, bytes_per_el: int,
-              num_pods: int = 0, ep_per_pod: int = 0) -> dict:
+              num_pods: int = 0, ep_per_pod: int = 0, codec=None) -> dict:
     """Bytes each device moves per all-to-all stage (send side), for the
     roofline collective term and the benchmark comm model.
 
@@ -257,11 +257,29 @@ def a2a_bytes(plan: DispatchPlan, d_model: int, bytes_per_el: int,
     ``near_bytes`` / ``far_bytes`` 2-level aliases.  ``num_pods`` /
     ``ep_per_pod`` are accepted for backward compatibility and ignored —
     the plan itself carries the mesh extents.
+
+    ``codec`` (a ``repro.core.dispatch.wire`` codec or registered name)
+    overrides the payload element size with the codec's wire dtype and, for
+    scaled codecs, adds the f32 per-(destination, expert) scale sideband —
+    so chunk choices and overlap estimates are solved against the bytes
+    that actually hit the wire.
     """
+    if isinstance(codec, str):
+        from repro.core.dispatch import wire as wire_lib  # lazy: no cycle
+        codec = wire_lib.get_codec(codec)
+    payload_b = bytes_per_el if codec is None else codec.wire_bytes_per_elem
+    scaled = codec is not None and codec.scaled
     E = plan.experts_per_rank
-    by_level = tuple(plan.caps[s] * E * plan.stage_dests(s)
-                     * d_model * bytes_per_el if plan.caps[s] else 0
-                     for s in range(plan.num_stages))
+
+    def stage_bytes(s: int) -> int:
+        if not plan.caps[s]:
+            return 0
+        b = plan.caps[s] * E * plan.stage_dests(s) * d_model * payload_b
+        if scaled:
+            b += E * plan.stage_dests(s) * 4   # one f32 scale per segment
+        return b
+
+    by_level = tuple(stage_bytes(s) for s in range(plan.num_stages))
     return {"by_level": by_level,
             "near_bytes": by_level[0],
             "far_bytes": sum(by_level[1:])}

@@ -170,17 +170,19 @@ def _stage_link(plan, stage: int, links: dict):
 
 
 def stage_overlap_terms(plan, *, d_model: int, bytes_per_el: int,
-                        links: dict | None = None) -> list:
+                        links: dict | None = None, codec=None) -> list:
     """Per-dispatch-stage ``{stage, bytes, alpha, beta, t_exchange}`` rows.
 
     Each stage's send bytes are charged against its outermost hop's link
     (measured when available, ladder constants otherwise) — the
-    level-indexed generalization of the old near/far split.
+    level-indexed generalization of the old near/far split.  ``codec``
+    (``repro.core.dispatch.wire``) rescales the payload bytes to the wire
+    dtype and adds the scale sideband — see ``capacity.a2a_bytes``.
     """
     from repro.core.capacity import a2a_bytes
 
     links = links or {}
-    b = a2a_bytes(plan, d_model, bytes_per_el)
+    b = a2a_bytes(plan, d_model, bytes_per_el, codec=codec)
     rows = []
     for s in range(plan.num_stages):
         if not plan.caps[s]:
@@ -199,7 +201,7 @@ def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
                       num_pods: int = 0, ep_per_pod: int = 0,
                       activation: str = "swiglu",
                       peak_flops: float = 197e12,
-                      links: dict | None = None) -> dict:
+                      links: dict | None = None, codec=None) -> dict:
     """Alpha-beta inputs for the overlap model from a dispatch plan.
 
     Exchange time charges each stage's send bytes against its link
@@ -213,10 +215,13 @@ def moe_overlap_terms(plan, *, d_model: int, d_ff: int, bytes_per_el: int,
     ``"near"`` / ``"far"`` pair (:func:`measured_moe_links`); any stage
     without a measurement falls back to the ladder constants.
     ``num_pods`` / ``ep_per_pod`` are accepted for backward compatibility
-    and ignored — the plan carries the mesh extents.
+    and ignored — the plan carries the mesh extents.  ``codec`` feeds the
+    wire-codec byte accounting through to ``capacity.a2a_bytes`` so the
+    chunk chooser sees quantized wire bytes.
     """
     stages = stage_overlap_terms(plan, d_model=d_model,
-                                 bytes_per_el=bytes_per_el, links=links)
+                                 bytes_per_el=bytes_per_el, links=links,
+                                 codec=codec)
     t_exchange = sum(r["t_exchange"] for r in stages)
     # expert rows this rank computes per layer: every (src rank, expert,
     # capacity slot) lands exactly one row — including the masked

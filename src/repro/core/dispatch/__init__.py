@@ -42,6 +42,14 @@ from repro.core.dispatch.routing import (       # noqa: F401
     slice_selection,
 )
 from repro.core.dispatch.schedule import software_pipeline  # noqa: F401
+from repro.core.dispatch.wire import (          # noqa: F401
+    CODECS,
+    CastCodec,
+    ScaledCodec,
+    WireCodec,
+    cast_codec,
+    get_codec,
+)
 from repro.core.dispatch.transport import (     # noqa: F401
     A2ATransport,
     GatherTransport,

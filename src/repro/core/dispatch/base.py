@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gating
+from repro.core.dispatch import wire as wire_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,9 +107,19 @@ class MoEConfig:
     activation: str = "swiglu"    # "swiglu" | "gelu"
     dtype: jnp.dtype = jnp.bfloat16
     use_kernel: bool = False      # Pallas grouped GEMM for expert FFN
-    a2a_dtype: str = ""           # e.g. "float8_e4m3fn": quantize dispatch/
-                                  # combine payloads on the wire (§Perf.2) —
-                                  # halves collective bytes vs bf16
+    a2a_dtype: str = ""           # deprecated alias for wire_codec: a raw
+                                  # dtype name resolves to the cast-only
+                                  # codec (DeprecationWarning)
+    wire_codec: object = None     # wire.WireCodec | registered name | None:
+                                  # what dispatch/combine payloads look
+                                  # like on the a2a wire (§Perf.2)
+
+    def __post_init__(self):
+        # resolve once at config time: unknown names fail here with the
+        # registry listed, not deep inside jnp.dtype at trace time
+        object.__setattr__(
+            self, "wire_codec",
+            wire_lib.resolve(self.wire_codec, self.a2a_dtype, stacklevel=4))
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +216,8 @@ def expert_ffn(params, xin, cfg: MoEConfig, ep: EPSpec, *,
 def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
                     *, seg_experts=None, rows_valid=None,
                     chunk_granular: bool = False, use_pallas=None,
-                    slot_to_token=None, slot_w=None):
+                    slot_to_token=None, slot_w=None,
+                    quantized: bool = False):
     """Segment-offset grouped expert FFN on a flat [R, d] row buffer.
 
     ``seg_offsets`` is the static offset vector of the contiguous sorted
@@ -227,6 +239,13 @@ def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
     down-projection partials commute with the linear combine scatter), so
     callers see full activations either way.
 
+    Quantized compute: ``quantized=True`` (the engine sets it when the
+    wire codec opts delivered rows into low-precision compute) routes the
+    non-fused call through the AQT-style int8 grouped GEMM — per-segment
+    int8 activations x per-expert int8 ``w_in``/``w_gate`` with i32
+    accumulation, full-precision backward (straight-through) — regardless
+    of the Pallas backend decision.
+
     Backend routing: with the Pallas kernels active for ``use_pallas``
     (``moe_gemm.ops.use_ragged``) every non-fused call goes through the
     occupancy-aware ragged entry, so FLOPs scale with delivered tokens;
@@ -246,13 +265,13 @@ def expert_ffn_flat(params, x_flat, seg_offsets, cfg: MoEConfig, ep: EPSpec,
         if ep.model_axis is not None:
             y = jax.lax.psum(y, ep.model_axis)
         return y
-    if moe_gemm_ops.use_ragged(use_pallas) or cfg.use_kernel:
+    if quantized or moe_gemm_ops.use_ragged(use_pallas) or cfg.use_kernel:
         y = moe_gemm_ops.grouped_ffn_segments(
             x_flat, offs, params["w_in"], params.get("w_gate"),
             params["w_out"], activation=cfg.activation,
             row_align=128 if chunk_granular else 1,
             seg_experts=seg_experts, rows_valid=rows_valid,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, quantized=quantized)
     else:
         # jnp path: collapse the (contiguous, expert-major) segments to
         # per-expert spans — zero-filled slack rows make the dense compute

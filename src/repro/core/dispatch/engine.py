@@ -207,8 +207,11 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
     """
     cfg, ep, plan, gate_cfg = eng.cfg, eng.ep, eng.plan, eng.gate_cfg
     T, d = x.shape
-    tr = transport.A2ATransport(ep=ep, wire_dtype=cfg.a2a_dtype)
+    tr = transport.A2ATransport(ep=ep, codec=cfg.wire_codec)
     stages = transport.plan_stages(plan, ep)
+    # codecs may opt delivered rows into quantized expert compute — only
+    # the remote staged GEMMs; the fused local path never hits the wire
+    quant = cfg.wire_codec is not None and cfg.wire_codec.quantize_compute
 
     routed = routing.route(params, x, cfg, ep, plan, gate_cfg,
                            with_bufs=False)
@@ -302,7 +305,7 @@ def _staged_a2a(params, x, eng: DispatchEngine, num_chunks: int):
         y = expert_ffn_flat(params, xin.reshape(E_l * R, d), segs, cfg, ep,
                             seg_experts=exps, rows_valid=valid,
                             chunk_granular=chunked,
-                            use_pallas=eng.use_pallas)
+                            use_pallas=eng.use_pallas, quantized=quant)
         return y.reshape(E_l, R, d)
 
     def combine(out, j, y_exp):

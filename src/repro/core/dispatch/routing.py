@@ -227,6 +227,14 @@ class DispatchIndices(NamedTuple):
     tokens — this is what the occupancy-aware ragged grouped GEMM consumes
     after the transport forwards the counts to the receiving rank
     (``A2ATransport.dispatch_counts``).
+
+    The same (stage, destination..., expert) segment granularity is the
+    wire-codec scale block (``core.dispatch.wire``): a scaled codec emits
+    one f32 scale per segment's [C, d] slab, shaped exactly like the count
+    tensor, and the transport moves the scale sideband over the identical
+    collective chain the counts ride.  Because valid slots are a
+    zero-filled prefix per segment, capacity slack can never inflate a
+    segment's quantization absmax.
     """
     slot_to_token: jnp.ndarray    # [S] int32, sentinel T
     slot_w: jnp.ndarray           # [S] f32, 0 for empty slots

@@ -8,10 +8,13 @@ routing or scheduling.  Two families exist:
   :class:`~repro.core.capacity.DispatchPlan`.  Stage ``s`` delivers over
   the innermost ``s + 1`` EP mesh axes as a chain of all_to_alls
   (outermost hop first), so a 2-axis mesh reproduces the PR-2 near/far
-  pair and an N-axis mesh gets N stages with no new code.  The wire-dtype
-  cast (e.g. fp8 payload quantization) lives here, immediately around each
-  collective, so only wire bytes are low-precision while compute stays in
-  the model dtype.
+  pair and an N-axis mesh gets N stages with no new code.  The wire
+  encoding (:mod:`repro.core.dispatch.wire` codec: cast, or per-segment
+  scaled int8/fp8 quantization) lives here: the payload is encoded once
+  before the hop chain, the f32 scale sideband rides the *same* chain the
+  per-segment counts use, and decode happens after the final transpose —
+  so only wire bytes are low-precision while compute stays in the model
+  dtype (unless the codec opts delivered rows into quantized compute).
 * :class:`GatherTransport` — the weights-stationary decode regime: tokens
   are (all-)gathered to every EP rank and partial expert outputs are
   psum-combined; no all-to-all at all.
@@ -32,28 +35,35 @@ definition in engine.py.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import wire as wire_lib
 from repro.core.dispatch.base import EPSpec
 
 
-def wire_a2a(x, axis_name, *, split_axis, concat_axis, wire_dtype: str = ""):
-    """all_to_all with optional on-the-wire quantization.
-
-    The cast happens immediately around the collective so only the wire
-    payload is low-precision; compute stays in the model dtype.  f8e4m3's
-    +-448 range comfortably covers post-norm activations.
-    """
-    if wire_dtype:
-        orig = x.dtype
-        x = x.astype(jnp.dtype(wire_dtype))
-        x = jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
-                               concat_axis=concat_axis, tiled=True)
-        return x.astype(orig)
+def _a2a(x, axis_name, *, split_axis, concat_axis):
     return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
                               concat_axis=concat_axis, tiled=True)
+
+
+def wire_a2a(x, axis_name, *, split_axis, concat_axis, wire_dtype: str = ""):
+    """all_to_all with an optional (deprecated) on-the-wire dtype cast.
+
+    ``wire_dtype=`` resolves to the cast-only codec with a
+    DeprecationWarning; scaled codecs need the segment layout only
+    :class:`A2ATransport` knows, so quantized wire goes through a
+    transport built with ``codec=`` instead of this helper.
+    """
+    codec = wire_lib.resolve(None, wire_dtype)
+    if codec is not None:
+        payload, _ = codec.encode(x)
+        payload = _a2a(payload, axis_name, split_axis=split_axis,
+                       concat_axis=concat_axis)
+        return codec.decode(payload, None, x.dtype)
+    return _a2a(x, axis_name, split_axis=split_axis, concat_axis=concat_axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,23 +134,136 @@ def stage_segments(num_experts: int, stage_widths) -> tuple:
     return tuple(offs), tuple(exps)
 
 
+def _dispatch_perm(buf, stage: Stage):
+    """Codec-free dispatch: the pure element permutation.  [*sizes, E_l,
+    C, d] -> a2a chain (outermost hop first) -> [E_l, num_dests*C, d]."""
+    k = len(stage.axis_names)
+    for i in range(k):
+        buf = _a2a(buf, stage.axis_names[i], split_axis=i, concat_axis=i)
+    E_l, C, d = buf.shape[k:]
+    perm = (k,) + tuple(range(k)) + (k + 1, k + 2)
+    return buf.transpose(perm).reshape(E_l, stage.num_dests * C, d)
+
+
+def _combine_perm(y, stage: Stage):
+    """Inverse (== transpose) of :func:`_dispatch_perm`: [E_l,
+    num_dests*C, d] -> reverse a2a chain -> [*sizes, E_l, C, d]."""
+    sizes = stage.axis_sizes
+    k = len(sizes)
+    E_l, R, d = y.shape
+    y = y.reshape((E_l,) + sizes + (R // stage.num_dests, d))
+    perm = tuple(range(1, k + 1)) + (0, k + 1, k + 2)
+    y = y.transpose(perm)                         # [*sizes, E_l, C, d]
+    for i in range(k - 1, -1, -1):
+        y = _a2a(y, stage.axis_names[i], split_axis=i, concat_axis=i)
+    return y
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _dispatch_scaled(codec, stage: Stage, buf):
+    """Scaled-codec dispatch: encode once, move (payload, scale) through
+    the same chain, decode after the final transpose.
+
+    Straight-through gradient: ``round`` and the float->int8 cast are
+    non-differentiable, so the backward pass is the exact full-precision
+    reverse permutation (the forward is a permutation up to rounding) —
+    quantized wire on the way out, f32 cotangents on the way back.
+    """
+    k = len(stage.axis_names)
+    payload, scale = codec.encode(buf, block_ndim=2)
+    for i in range(k):
+        ax = stage.axis_names[i]
+        payload = _a2a(payload, ax, split_axis=i, concat_axis=i)
+        scale = _a2a(scale, ax, split_axis=i, concat_axis=i)
+    E_l, C, d = payload.shape[k:]
+    perm = (k,) + tuple(range(k)) + (k + 1, k + 2)
+    out = payload.transpose(perm).reshape(E_l, stage.num_dests, C, d)
+    s = scale.transpose((k,) + tuple(range(k))).reshape(E_l, stage.num_dests)
+    return codec.decode(out, s[:, :, None, None], buf.dtype).reshape(
+        E_l, stage.num_dests * C, d)
+
+
+def _dispatch_scaled_fwd(codec, stage, buf):
+    return _dispatch_scaled(codec, stage, buf), None
+
+
+def _dispatch_scaled_bwd(codec, stage, _res, g):
+    # the cotangent already carries the source dtype (decode casts there)
+    return (_combine_perm(g, stage),)
+
+
+_dispatch_scaled.defvjp(_dispatch_scaled_fwd, _dispatch_scaled_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _combine_scaled(codec, stage: Stage, y):
+    """Scaled-codec combine: transpose back to the send layout, encode,
+    reverse chain, decode at the source.  Same straight-through backward
+    as :func:`_dispatch_scaled`."""
+    sizes = stage.axis_sizes
+    k = len(sizes)
+    E_l, R, d = y.shape
+    orig = y.dtype
+    y = y.reshape((E_l,) + sizes + (R // stage.num_dests, d))
+    perm = tuple(range(1, k + 1)) + (0, k + 1, k + 2)
+    y = y.transpose(perm)                         # [*sizes, E_l, C, d]
+    payload, scale = codec.encode(y, block_ndim=2)
+    for i in range(k - 1, -1, -1):
+        ax = stage.axis_names[i]
+        payload = _a2a(payload, ax, split_axis=i, concat_axis=i)
+        scale = _a2a(scale, ax, split_axis=i, concat_axis=i)
+    return codec.decode(payload, scale[..., None, None], orig)
+
+
+def _combine_scaled_fwd(codec, stage, y):
+    return _combine_scaled(codec, stage, y), None
+
+
+def _combine_scaled_bwd(codec, stage, _res, g):
+    return (_dispatch_perm(g, stage),)
+
+
+_combine_scaled.defvjp(_combine_scaled_fwd, _combine_scaled_bwd)
+
+
 @dataclasses.dataclass(frozen=True)
 class A2ATransport:
-    """Equal-split staged all-to-all over the EP mesh axes."""
+    """Equal-split staged all-to-all over the EP mesh axes.
+
+    ``codec`` (a :mod:`repro.core.dispatch.wire` codec, a registered codec
+    name, or None for a raw wire) owns the payload encoding.  Scaled
+    codecs compute one f32 scale per (destination, expert) ``[C, d]``
+    block — shaped ``[*sizes, E_l]``, exactly the :meth:`dispatch_counts`
+    metadata layout — and the scale sideband rides the identical
+    split/concat chain as the payload, landing as ``[E_l, num_dests]`` at
+    the receiver.  Scaled transfers differentiate straight-through: the
+    backward pass moves full-precision cotangents over the exact reverse
+    permutation, so quantized wire stays trainable.  ``wire_dtype`` is
+    the deprecated stringly alias and resolves to the byte-identical cast
+    codec with a DeprecationWarning.
+    """
 
     ep: EPSpec
-    wire_dtype: str = ""
+    wire_dtype: str = ""          # deprecated: use codec=
+    codec: wire_lib.WireCodec | str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "codec",
+            wire_lib.resolve(self.codec, self.wire_dtype, stacklevel=4))
 
     def dispatch(self, buf, stage: Stage):
         """[*sizes, E_l, C, d] local buffer -> [E_l, prod(sizes)*C, d]
         expert rows, via a chain of all_to_alls (outermost hop first)."""
-        k = len(stage.axis_names)
-        for i, ax in enumerate(stage.axis_names):
-            buf = wire_a2a(buf, ax, split_axis=i, concat_axis=i,
-                           wire_dtype=self.wire_dtype)
-        E_l, C, d = buf.shape[k:]
-        perm = (k,) + tuple(range(k)) + (k + 1, k + 2)
-        return buf.transpose(perm).reshape(E_l, stage.num_dests * C, d)
+        if self.codec is None:
+            return _dispatch_perm(buf, stage)
+        if self.codec.scaled:
+            return _dispatch_scaled(self.codec, stage, buf)
+        # cast codec: a plain dtype cast around the permutation (autodiff
+        # handles the cast, so no straight-through wrapper is needed)
+        payload, _ = self.codec.encode(buf, block_ndim=2)
+        return self.codec.decode(_dispatch_perm(payload, stage), None,
+                                 buf.dtype)
 
     def dispatch_counts(self, cnt, stage: Stage):
         """[*sizes, E_l] per-(destination, expert) valid-row counts ->
@@ -162,16 +285,13 @@ class A2ATransport:
     def combine(self, y, stage: Stage):
         """[E_l, prod(sizes)*C, d] expert outputs -> [*sizes, E_l, C, d]
         back at the source (reverse chain, innermost hop first)."""
-        sizes = stage.axis_sizes
-        k = len(sizes)
-        E_l, R, d = y.shape
-        y = y.reshape((E_l,) + sizes + (R // stage.num_dests, d))
-        perm = tuple(range(1, k + 1)) + (0, k + 1, k + 2)
-        y = y.transpose(perm)                     # [*sizes, E_l, C, d]
-        for i in range(k - 1, -1, -1):
-            y = wire_a2a(y, stage.axis_names[i], split_axis=i, concat_axis=i,
-                         wire_dtype=self.wire_dtype)
-        return y
+        if self.codec is None:
+            return _combine_perm(y, stage)
+        if self.codec.scaled:
+            return _combine_scaled(self.codec, stage, y)
+        orig = y.dtype
+        payload, _ = self.codec.encode(y, block_ndim=2)
+        return self.codec.decode(_combine_perm(payload, stage), None, orig)
 
     # --- deprecated near/far wrappers (PR-2 compat) ------------------------
 

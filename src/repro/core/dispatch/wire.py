@@ -1,0 +1,166 @@
+"""Wire codecs: first-class payload encodings for the dispatch collectives.
+
+A :class:`WireCodec` describes *what travels over the a2a wire* — the
+payload dtype, whether a per-segment scale sideband rides the chain, and
+whether delivered rows should also *compute* in low precision.  One codec
+object is the single source of truth consumed by three layers that must
+never drift:
+
+* ``transport.A2ATransport`` — encodes once before the hop chain, moves
+  the (payload, scale) pair through the same tiled all_to_all chain, and
+  decodes after the final transpose;
+* ``core.comm_model`` / ``core.capacity`` byte accounting — so
+  ``choose_num_chunks`` and the overlap model are solved against the
+  bytes that actually hit the wire;
+* ``analysis.hlo_check`` — the expectation builder derives the collective
+  inventory (payload dtype + scale sideband) from the same object.
+
+Scale layout contract: scales are computed **per (destination, expert)
+block** over each ``[C, d]`` capacity slab, i.e. one f32 scalar per
+delivered segment, shaped ``[*sizes, E_l]`` before the chain — exactly
+the shape of the ``dispatch_counts`` metadata exchange, so the scale
+sideband rides the identical split/concat chain and lands as
+``[E_l, num_dests]`` next to the per-segment valid-row counts.  Routing's
+zero-filled slack rows cannot inflate the absmax, so occupancy slack
+never costs quantization range.
+
+Registering a codec::
+
+    from repro.core.dispatch import wire
+    wire.CODECS["my4bit"] = wire.ScaledCodec(
+        name="my4bit", wire_dtype="int8", qmax=7.0)
+
+Deprecated alias: the legacy stringly ``wire_dtype=`` / ``a2a_dtype=``
+knobs resolve (with a DeprecationWarning) to :func:`cast_codec` — a
+scale-free cast that is byte-identical to the old per-hop cast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Base codec: how a dispatch payload is represented on the wire.
+
+    ``scaled`` — a per-segment f32 scale sideband rides the a2a chain.
+    ``quantize_compute`` — delivered rows also run the expert GEMMs in
+    the wire integer dtype (AQT-style, i32 accumulate); only meaningful
+    for integer codecs.
+    """
+
+    name: str
+    wire_dtype: str               # jnp dtype name of the wire payload
+    scaled: bool = False
+    quantize_compute: bool = False
+
+    @property
+    def wire_bytes_per_elem(self) -> int:
+        return jnp.dtype(self.wire_dtype).itemsize
+
+    def encode(self, x, *, block_ndim: int = 2):
+        """[..., *block] -> (payload, scale | None).
+
+        ``block_ndim`` trailing dims form one scale block; the returned
+        scale drops those dims (f32).  Cast-only codecs return None."""
+        raise NotImplementedError
+
+    def decode(self, payload, scale, out_dtype):
+        """Inverse of :meth:`encode`; ``scale`` must already be broadcast
+        to the payload's shape by the caller (or None for cast codecs)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class CastCodec(WireCodec):
+    """Scale-free cast around the wire — the legacy ``wire_dtype`` path."""
+
+    def encode(self, x, *, block_ndim: int = 2):
+        return x.astype(jnp.dtype(self.wire_dtype)), None
+
+    def decode(self, payload, scale, out_dtype):
+        return payload.astype(out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledCodec(WireCodec):
+    """Symmetric per-block absmax scaling into a narrow wire dtype.
+
+    ``qmax`` is the largest representable magnitude of the wire dtype
+    (127 for int8, 448 for f8e4m3).  Empty / all-zero blocks encode with
+    scale ``1`` so the round trip stays exact on zero-filled slack rows.
+    """
+
+    scaled: bool = True
+    qmax: float = 127.0
+
+    def encode(self, x, *, block_ndim: int = 2):
+        axes = tuple(range(x.ndim - block_ndim, x.ndim))
+        xf = x.astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(xf), axis=axes)
+        scale = jnp.where(absmax > 0, absmax, self.qmax) / self.qmax
+        q = xf / scale.reshape(scale.shape + (1,) * block_ndim)
+        wd = jnp.dtype(self.wire_dtype)
+        if jnp.issubdtype(wd, jnp.integer):
+            q = jnp.clip(jnp.round(q), -self.qmax, self.qmax)
+        return q.astype(wd), scale
+
+    def decode(self, payload, scale, out_dtype):
+        return (payload.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+CODECS = {
+    "bf16": CastCodec(name="bf16", wire_dtype="bfloat16"),
+    "int8": ScaledCodec(name="int8", wire_dtype="int8", qmax=127.0,
+                        quantize_compute=True),
+    "fp8e4m3": ScaledCodec(name="fp8e4m3", wire_dtype="float8_e4m3fn",
+                           qmax=448.0),
+}
+
+
+def get_codec(spec) -> WireCodec | None:
+    """Resolve a codec spec: None/"" -> None, a codec -> itself, a
+    registered name -> the codec; anything else is a config-time error
+    naming the registry (the old path died deep inside ``jnp.dtype``)."""
+    if spec is None or spec == "":
+        return None
+    if isinstance(spec, WireCodec):
+        return spec
+    codec = CODECS.get(spec)
+    if codec is None:
+        raise ValueError(
+            f"unknown wire codec {spec!r}; registered codecs: "
+            f"{sorted(CODECS)} (or pass a WireCodec instance)")
+    return codec
+
+
+def cast_codec(dtype_str: str) -> CastCodec:
+    """Cast-only codec for a raw dtype name — the deprecated
+    ``wire_dtype=``/``a2a_dtype=`` compatibility surface."""
+    try:
+        jnp.dtype(dtype_str)
+    except TypeError:
+        raise ValueError(
+            f"unknown wire dtype {dtype_str!r}; not a jnp dtype and not a "
+            f"registered codec name {sorted(CODECS)}") from None
+    return CastCodec(name=f"cast:{dtype_str}", wire_dtype=dtype_str)
+
+
+def resolve(codec, wire_dtype: str, *, stacklevel: int = 3):
+    """One resolved codec from the (codec, deprecated wire_dtype) pair.
+
+    ``codec`` wins when set; a bare ``wire_dtype`` warns and maps to the
+    byte-identical cast codec."""
+    if codec is not None and codec != "":
+        return get_codec(codec)
+    if wire_dtype:
+        warnings.warn(
+            "wire_dtype=/a2a_dtype= is deprecated; pass a wire codec "
+            "(e.g. wire_codec=\"bf16\"|\"int8\"|\"fp8e4m3\") instead",
+            DeprecationWarning, stacklevel=stacklevel)
+        return cast_codec(wire_dtype)
+    return None

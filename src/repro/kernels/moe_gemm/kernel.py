@@ -78,6 +78,22 @@ def _ragged_wout_map(b, j, row, eid, nv):
     return (eid[b], j, 0)
 
 
+# quant variant: two extra f32 scale vectors (per-block dequant factors)
+# lead the prefetch tuple so the trailing three stay (row, eid, nvalid) —
+# the convention ``analysis.pallas_check.check_plan_blocks`` keys on.
+
+def _ragged_quant_row_map(b, j, s1, sg, row, eid, nv):
+    return (row[b], 0)
+
+
+def _ragged_quant_win_map(b, j, s1, sg, row, eid, nv):
+    return (eid[b], 0, j)
+
+
+def _ragged_quant_wout_map(b, j, s1, sg, row, eid, nv):
+    return (eid[b], j, 0)
+
+
 def _ffn_body(x, win_ref, wgate_ref, wout_ref, *, activation: str):
     """One (row-block, f-block) partial product, f32 [bc, d]."""
     win = win_ref[0]                   # [d, bf]
@@ -252,6 +268,91 @@ def grouped_ffn_ragged_pallas(x, block_row, block_eid, block_nvalid, w_in,
 
 
 # ---------------------------------------------------------------------------
+# quantized ragged entry (AQT-style int8 up-projections, i32 accumulate)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_quant_kernel(s1_ref, sg_ref, row_ref, eid_ref, nvalid_ref,
+                         x_ref, win_ref, wgate_ref, wout_ref, y_ref,
+                         acc_ref, *, activation: str):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nf = pl.num_programs(1)
+    nv = nvalid_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nv > 0)
+    def _compute():
+        xq = x_ref[...]                              # [bc, d] int8
+        # int8 x int8 -> i32 accumulate on the MXU; one f32 dequant factor
+        # per row block (= per segment x per expert), prefetched in SMEM
+        h = jnp.dot(xq, win_ref[0],
+                    preferred_element_type=jnp.int32)
+        h = h.astype(jnp.float32) * s1_ref[b]
+        if activation == "swiglu":
+            g = jnp.dot(xq, wgate_ref[0],
+                        preferred_element_type=jnp.int32)
+            h = jax.nn.silu(g.astype(jnp.float32) * sg_ref[b]) * h
+        else:
+            h = jax.nn.gelu(h)
+        # down-projection stays in the model dtype, f32 accumulate
+        part = jnp.dot(h.astype(wout_ref.dtype), wout_ref[0],
+                       preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, part.shape, 0)
+        acc_ref[...] += jnp.where(rows < nv, part, 0.0)
+
+    @pl.when(j == nf - 1)
+    def _epilogue():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def grouped_ffn_ragged_quant_pallas(xq, s1, sg, block_row, block_eid,
+                                    block_nvalid, qw_in, qw_gate, w_out, *,
+                                    out_dtype, activation: str = "swiglu",
+                                    block_c: int, block_f: int = 256,
+                                    interpret: bool = False):
+    """Quantized occupancy-aware grouped FFN.
+
+    Same grid / block decomposition / zero-slot contract as
+    :func:`grouped_ffn_ragged_pallas`, but ``xq`` and ``qw_in``/``qw_gate``
+    are int8 and the up-projection dots accumulate in i32.  ``s1``/``sg``
+    are [NB] f32 per-block dequant factors (segment activation scale x
+    expert weight scale), scalar-prefetched ahead of the block vectors so
+    the trailing three prefetch operands keep the (row, eid, nvalid)
+    convention.  The down-projection runs against the unquantized ``w_out``
+    with f32 accumulation — "accumulate in i32/f32".
+    """
+    R, d = xq.shape
+    f = qw_in.shape[-1]
+    bc = block_c
+    bf = min(block_f, f)
+    nb = block_row.shape[0]
+    nf = pl.cdiv(f, bf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(nb, nf),
+        in_specs=[
+            pl.BlockSpec((bc, d), _ragged_quant_row_map),
+            pl.BlockSpec((1, d, bf), _ragged_quant_win_map),
+            pl.BlockSpec((1, d, bf), _ragged_quant_win_map),
+            pl.BlockSpec((1, bf, d), _ragged_quant_wout_map),
+        ],
+        out_specs=pl.BlockSpec((bc, d), _ragged_quant_row_map),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+    )
+    kernel = functools.partial(_ragged_quant_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, d), out_dtype),
+        interpret=interpret,
+    )(s1, sg, block_row, block_eid, block_nvalid, xq, qw_in, qw_gate, w_out)
+
+
+# ---------------------------------------------------------------------------
 # analyzer layouts (repro.analysis.pallas_check)
 # ---------------------------------------------------------------------------
 
@@ -313,6 +414,46 @@ def _ragged_layouts():
                               _ragged_wout_map),
             backend.BlockDecl("y", "out", 4, (bc, d), (R, d),
                               _ragged_row_map),
+            backend.BlockDecl("acc", "scratch", 4, (bc, d)),
+        ),
+        meta={"block_c": int(bc), "seg_offsets": seg_offsets,
+              "seg_experts": seg_experts, "block_seg": bseg,
+              "block_loc": bloc},
+    )]
+
+
+@backend.register_kernel("moe_gemm.grouped_ffn_ragged_quant")
+def _ragged_quant_layouts():
+    """Quantized ragged layout: int8 x / w_in / w_gate blocks (1 byte), f32
+    per-block scale vectors leading the prefetch tuple, trailing three
+    prefetch operands keep the (row, eid, nvalid) plan-blocks convention."""
+    from repro.kernels.moe_gemm import ops  # circular at module scope
+
+    E, d, f = 4, 128, 512
+    bf = 256
+    seg_offsets = np.asarray([0, 256, 384, 640, 768], np.int32)
+    seg_experts = np.arange(E, dtype=np.int32)
+    bc, brow, beid, bseg, bloc = ops.plan_blocks(seg_offsets, seg_experts,
+                                                 block_c=128)
+    R = int(seg_offsets[-1])
+    nv = np.full(brow.shape, bc, np.int32)  # static stand-in (runtime value)
+    s1 = np.ones(brow.shape, np.float32)    # per-block dequant factors
+    grid = (brow.shape[0], f // bf)
+    return [backend.KernelLayout(
+        kernel="moe_gemm.grouped_ffn_ragged_quant",
+        grid=grid,
+        prefetch=(s1, s1, brow, beid, nv),
+        blocks=(
+            backend.BlockDecl("x", "in", 1, (bc, d), (R, d),
+                              _ragged_quant_row_map),
+            backend.BlockDecl("w_in", "in", 1, (1, d, bf), (E, d, f),
+                              _ragged_quant_win_map),
+            backend.BlockDecl("w_gate", "in", 1, (1, d, bf), (E, d, f),
+                              _ragged_quant_win_map),
+            backend.BlockDecl("w_out", "in", 4, (1, bf, d), (E, f, d),
+                              _ragged_quant_wout_map),
+            backend.BlockDecl("y", "out", 4, (bc, d), (R, d),
+                              _ragged_quant_row_map),
             backend.BlockDecl("acc", "scratch", 4, (bc, d)),
         ),
         meta={"block_c": int(bc), "seg_offsets": seg_offsets,

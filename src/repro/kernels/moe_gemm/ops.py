@@ -19,6 +19,12 @@ Entries:
   valid-row counts; row blocks past a segment's realized rows do zero MXU
   work and emit zero rows (see ``plan_blocks`` for the static block
   decomposition the scalar-prefetch grid consumes).
+* :func:`grouped_ffn_ragged_quant` — the AQT-style quantized ragged entry
+  (int8 up-projections, i32 accumulate, per-segment activation scales x
+  per-expert weight scales, full-precision straight-through backward);
+  ``grouped_ffn_segments(quantized=True)`` is how the dispatch engine
+  reaches it when the wire codec opts delivered rows into low-precision
+  compute.
 * :func:`grouped_ffn_segments` — the segment-offset compat surface the
   dispatch engine historically called: equal spans reshape onto the dense
   entry when the kernels are off; any ragged layout (and every kernel-on
@@ -41,8 +47,11 @@ from repro.kernels.backend import (float0 as _float0,
                                    interpret_mode as _interpret,
                                    kernels_active as _kernels_active)
 from repro.kernels.moe_gemm import kernel
-from repro.kernels.moe_gemm.ref import (grouped_ffn_ragged_ref,
+from repro.kernels.moe_gemm.ref import (grouped_ffn_ragged_quant_ref,
+                                        grouped_ffn_ragged_ref,
                                         grouped_ffn_ref,
+                                        quantize_experts,
+                                        quantize_segments,
                                         segment_relayout_maps)
 
 
@@ -207,9 +216,118 @@ def grouped_ffn_ragged(x, seg_offsets, seg_experts, rows_valid, w_in, w_gate,
     return y
 
 
+# ---------------------------------------------------------------------------
+# quantized ragged entry (AQT-style: int8 forward, straight-through backward)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ragged_quant(static, x, rows_valid, w_in, w_gate, w_out):
+    (seg_offsets, seg_experts, activation, block_c, block_f, interpret,
+     use_kernel) = static
+    if not use_kernel:
+        # quant reference fallback: same int8/i32 arithmetic, pure jnp —
+        # numerics match the kernel on every backend
+        return grouped_ffn_ragged_quant_ref(
+            x, seg_offsets, seg_experts, rows_valid, w_in,
+            w_gate if activation == "swiglu" else None, w_out,
+            activation=activation)
+    xq, sx = quantize_segments(x, seg_offsets)
+    q_in, s_in = quantize_experts(w_in)
+    q_g, s_g = quantize_experts(w_gate)
+    bc, brow, beid, bseg, bloc = plan_blocks(seg_offsets, seg_experts,
+                                             block_c)
+    nvalid = jnp.clip(jnp.take(jnp.asarray(rows_valid, jnp.int32),
+                               jnp.asarray(bseg)) - jnp.asarray(bloc),
+                      0, bc).astype(jnp.int32)
+    # per-block dequant factors: segment activation scale x expert weight
+    # scale, resolved here so the kernel never chains SMEM lookups
+    sx_b = jnp.take(sx, jnp.asarray(bseg))
+    s1 = (sx_b * jnp.take(s_in, jnp.asarray(beid))).astype(jnp.float32)
+    sg = (sx_b * jnp.take(s_g, jnp.asarray(beid))).astype(jnp.float32)
+    return kernel.grouped_ffn_ragged_quant_pallas(
+        xq, s1, sg, jnp.asarray(brow), jnp.asarray(beid), nvalid,
+        q_in, q_g, w_out, out_dtype=x.dtype, activation=activation,
+        block_c=bc, block_f=block_f, interpret=interpret)
+
+
+def _ragged_quant_fwd(static, x, rows_valid, w_in, w_gate, w_out):
+    y = _ragged_quant(static, x, rows_valid, w_in, w_gate, w_out)
+    return y, (x, rows_valid, w_in, w_gate, w_out)
+
+
+def _ragged_quant_bwd(static, res, g):
+    # straight-through estimator: gradients flow through the full-precision
+    # ragged reference, ignoring round/clip — the AQT training convention
+    seg_offsets, seg_experts, activation, *_ = static
+    x, rows_valid, w_in, w_gate, w_out = res
+
+    def f(x_, wi_, wg_, wo_):
+        return grouped_ffn_ragged_ref(
+            x_, seg_offsets, seg_experts, rows_valid, wi_,
+            wg_ if activation == "swiglu" else None, wo_,
+            activation=activation)
+
+    _, vjp = jax.vjp(f, x, w_in, w_gate, w_out)
+    gx, gwi, gwg, gwo = vjp(g.astype(x.dtype))
+    return gx, _float0(rows_valid), gwi, gwg, gwo
+
+
+_ragged_quant.defvjp(_ragged_quant_fwd, _ragged_quant_bwd)
+
+
+def grouped_ffn_ragged_quant(x, seg_offsets, seg_experts, rows_valid, w_in,
+                             w_gate, w_out, *, activation: str = "swiglu",
+                             block_c: int = 128, block_f: int = 256,
+                             row_align: int = 1, use_pallas=None):
+    """Quantized occupancy-aware grouped FFN (same surface as
+    :func:`grouped_ffn_ragged`).
+
+    The two up-projections run AQT-style — per-segment int8 activations x
+    per-expert int8 weights with i32 accumulation, dequantized before the
+    nonlinearity — while the down-projection stays in the model dtype with
+    f32 accumulation.  Backward is the full-precision straight-through
+    reference, so training gradients ignore the round/clip.  With the Pallas
+    kernels off the forward falls back to the *quantized* jnp reference, so
+    the arithmetic (and its error) is identical on every backend.
+    """
+    offs = tuple(int(o) for o in seg_offsets)
+    exps = tuple(int(e) for e in seg_experts)
+    R = x.shape[0]
+    assert len(offs) == len(exps) + 1 and offs[0] == 0 \
+        and offs[-1] == R, (offs, len(exps), x.shape)
+    if R == 0:
+        return x
+    swiglu = activation == "swiglu" and w_gate is not None
+    widths = [offs[s + 1] - offs[s] for s in range(len(exps))]
+    if rows_valid is None:
+        rows_valid = jnp.asarray(widths, jnp.int32)
+    use_kernel = use_ragged(use_pallas)
+
+    wg = w_gate if swiglu else w_in   # placeholder, un-grad-ed by gelu
+    align = max(1, min(int(row_align), int(block_c)))
+    unaligned = use_kernel and align > 1 and any(w % align for w in widths)
+    if unaligned:
+        pw = np.asarray([-(-w // align) * align for w in widths], np.int64)
+        poffs = np.concatenate([[0], np.cumsum(pw)])
+        gather, carve = segment_relayout_maps(offs, poffs)
+        xz = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+        xp = jnp.take(xz, jnp.asarray(gather), axis=0)   # sentinel -> zeros
+        offs = tuple(int(o) for o in poffs)
+    else:
+        xp = x
+    static = (offs, exps, "swiglu" if swiglu else "gelu",
+              int(block_c), int(block_f), _interpret(), use_kernel)
+    y = _ragged_quant(static, xp, rows_valid, w_in, wg, w_out)
+    if unaligned:
+        y = jnp.take(y, jnp.asarray(carve), axis=0)
+    return y
+
+
 def grouped_ffn_segments(x, seg_offsets, w_in, w_gate, w_out, *,
                          activation: str = "swiglu", row_align: int = 1,
-                         seg_experts=None, rows_valid=None, use_pallas=None):
+                         seg_experts=None, rows_valid=None, use_pallas=None,
+                         quantized: bool = False):
     """Segment-offset grouped FFN over a flat [R, d] row buffer.
 
     ``seg_offsets`` is a static, monotone offset vector: segment ``s`` owns
@@ -232,6 +350,13 @@ def grouped_ffn_segments(x, seg_offsets, w_in, w_gate, w_out, *,
     assert offs[0] == 0 and offs[-1] == x.shape[0], (offs, x.shape)
     widths = [offs[s + 1] - offs[s] for s in range(len(seg_experts))]
     d = x.shape[-1]
+    if quantized:
+        # wire codec opted delivered rows into low-precision compute:
+        # always the quantized ragged entry, never the dense fast path
+        return grouped_ffn_ragged_quant(
+            x, offs, seg_experts, rows_valid, w_in, w_gate, w_out,
+            activation=activation, row_align=row_align,
+            use_pallas=use_pallas)
     dense = (rows_valid is None and len(set(widths)) == 1
              and len(widths) == E
              and tuple(seg_experts) == tuple(range(E))

@@ -47,6 +47,110 @@ def segment_relayout_maps(src_offsets, dst_offsets):
     return gather, carve
 
 
+def quantize_segments(x, seg_offsets, *, qmax: float = 127.0):
+    """Per-segment symmetric quantization of a flat [R, d] row buffer.
+
+    One f32 scale per contiguous segment (absmax over the segment's rows /
+    ``qmax``); all-zero or empty segments get scale 1 so the round trip is
+    exact on zero-filled slack rows.  Returns ``(q_int8 [R, d], scale [S])``.
+    """
+    offs = np.asarray([int(o) for o in seg_offsets], np.int64)
+    S = len(offs) - 1
+    seg_ids = jnp.asarray(
+        np.searchsorted(offs[1:], np.arange(int(offs[-1])), side="right"),
+        jnp.int32)
+    xf = x.astype(jnp.float32)
+    row_max = jnp.max(jnp.abs(xf), axis=-1)
+    absmax = jax.ops.segment_max(row_max, seg_ids, num_segments=S)
+    scale = jnp.where(absmax > 0, absmax, qmax) / qmax
+    q = jnp.clip(jnp.round(xf / jnp.take(scale, seg_ids)[:, None]),
+                 -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_experts(w, *, qmax: float = 127.0):
+    """Per-expert symmetric quantization of [E, d, f] weights ->
+    ``(q_int8, scale [E])``."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=(1, 2))
+    scale = jnp.where(absmax > 0, absmax, qmax) / qmax
+    q = jnp.clip(jnp.round(wf / scale[:, None, None]),
+                 -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def grouped_ffn_ragged_quant_ref(x, seg_offsets, seg_experts, rows_valid,
+                                 w_in, w_gate, w_out, *,
+                                 activation: str = "swiglu"):
+    """Oracle for the AQT-style quantized ragged entry.
+
+    Same segment layout / masking contract as :func:`grouped_ffn_ragged_ref`
+    but the two up-projections run in int8 with i32 accumulation: per-segment
+    activation scales x per-expert ``w_in``/``w_gate`` scales, dequantized
+    into f32 before the activation; the down-projection (``w_out``) stays in
+    the model dtype with f32 accumulation.  Integer arithmetic is exact, so
+    this reference and the Pallas kernel agree to f32-summation-order
+    tolerance.
+    """
+    offs = np.asarray([int(o) for o in seg_offsets], np.int64)
+    exps = tuple(int(e) for e in seg_experts)
+    S = len(exps)
+    R = x.shape[0]
+    assert offs.shape[0] == S + 1 and offs[0] == 0 and offs[-1] == R, \
+        (offs, S, x.shape)
+    widths = offs[1:] - offs[:-1]
+    if not S or R == 0:
+        return jnp.zeros_like(x)
+    cmax = int(widths.max())
+
+    row = np.arange(cmax)[None, :]
+    in_seg = row < widths[:, None]
+    equal = bool((widths == cmax).all())
+    if equal:
+        xs = x.reshape(S, cmax, -1)
+    else:
+        gather, carve = segment_relayout_maps(offs, np.arange(S + 1) * cmax)
+        xz = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+        xs = jnp.take(xz, jnp.asarray(gather.reshape(S, cmax)), axis=0)
+
+    if rows_valid is None:
+        mask = jnp.asarray(in_seg)
+    else:
+        mask = jnp.asarray(in_seg) & \
+            (jnp.asarray(row) < jnp.asarray(rows_valid, jnp.int32)[:, None])
+    xs = xs * mask[..., None].astype(xs.dtype)
+
+    # per-segment activation quantization on the equal-width view (the
+    # masked view matches the flat-buffer quantization under the zero-slot
+    # convention) and per-expert weight quantization, gathered per segment
+    qmax = 127.0
+    xf = xs.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=(1, 2))
+    sx = jnp.where(absmax > 0, absmax, qmax) / qmax            # [S]
+    xq = jnp.clip(jnp.round(xf / sx[:, None, None]),
+                  -qmax, qmax).astype(jnp.int8)
+
+    eid = jnp.asarray(exps, jnp.int32)
+    q_in, s_in = quantize_experts(w_in, qmax=qmax)
+    h = jnp.einsum("scd,sdf->scf", xq.astype(jnp.int32),
+                   jnp.take(q_in, eid, axis=0).astype(jnp.int32))
+    h = h.astype(jnp.float32) * (sx * jnp.take(s_in, eid))[:, None, None]
+    if activation == "swiglu" and w_gate is not None:
+        q_g, s_g = quantize_experts(w_gate, qmax=qmax)
+        g = jnp.einsum("scd,sdf->scf", xq.astype(jnp.int32),
+                       jnp.take(q_g, eid, axis=0).astype(jnp.int32))
+        g = g.astype(jnp.float32) * (sx * jnp.take(s_g, eid))[:, None, None]
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ys = jnp.einsum("scf,sfd->scd", h.astype(w_out.dtype).astype(jnp.float32),
+                    jnp.take(w_out, eid, axis=0).astype(jnp.float32))
+    ys = (ys * mask[..., None].astype(ys.dtype)).astype(x.dtype)
+    if equal:
+        return ys.reshape(R, -1)
+    return jnp.take(ys.reshape(S * cmax, -1), jnp.asarray(carve), axis=0)
+
+
 def grouped_ffn_ragged_ref(x, seg_offsets, seg_experts, rows_valid, w_in,
                            w_gate, w_out, *, activation: str = "swiglu"):
     """Oracle for the occupancy-aware ragged entry.

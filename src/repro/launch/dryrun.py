@@ -91,7 +91,7 @@ def lower_one(arch_id: str, shape_name: str, multi_pod,
     if optimized:
         import dataclasses as _dc
         ctx = _dc.replace(ctx, use_blockwise=True, fused_xent=True,
-                          a2a_dtype="float8_e4m3fn" if arch.is_moe else "",
+                          wire_codec="fp8e4m3" if arch.is_moe else None,
                           mamba_scan_chunk=512, xlstm_chunk=512)
         if kind == "prefill" and arch.is_moe:
             # inference prefill needs no drop headroom: cf 1.25 -> 1.0
@@ -107,7 +107,8 @@ def lower_one(arch_id: str, shape_name: str, multi_pod,
             # mesh shape), not the ICI/DCI constants.
             from repro.core import capacity as capacity_lib
             nc = model_lib.resolve_num_chunks(arch, ctx.plan, ctx.ep, 0,
-                                              mesh=mesh)
+                                              mesh=mesh,
+                                              wire_codec=ctx.wire_codec)
             ctx = _dc.replace(
                 ctx, dispatch="a2a_pipelined", a2a_num_chunks=nc,
                 plan=capacity_lib.align_to_chunks(ctx.plan, nc))

@@ -88,12 +88,15 @@ def make_gate_cfg(arch: ArchConfig, plan, ep, aux_mode: str,
 
 
 def resolve_num_chunks(arch: ArchConfig, plan, ep,
-                       num_chunks: int = 0, *, mesh=None) -> int:
+                       num_chunks: int = 0, *, mesh=None,
+                       wire_codec=None) -> int:
     """Chunk count for pipelined dispatch; 0 = pick via the overlap model.
 
     With ``mesh`` given, the overlap model's alpha/beta come from *measured*
     links (an all-to-all micro-benchmark on that mesh, cached per mesh
-    shape) instead of the ICI/DCI topology constants.
+    shape) instead of the ICI/DCI topology constants.  ``wire_codec``
+    rescales the exchange bytes to the wire encoding, so a codec swap can
+    legitimately change the chunk verdict.
     """
     if num_chunks > 0:
         return int(num_chunks)
@@ -104,7 +107,7 @@ def resolve_num_chunks(arch: ArchConfig, plan, ep,
     terms = comm_model.moe_overlap_terms(
         plan, d_model=arch.d_model, d_ff=arch.moe.d_ff_expert,
         bytes_per_el=2 if arch.jnp_dtype == jnp.bfloat16 else 4,
-        activation=arch.activation, links=links)
+        activation=arch.activation, links=links, codec=wire_codec)
     return comm_model.choose_num_chunks(**terms)
 
 
@@ -117,8 +120,14 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
               a2a_num_chunks: int = 0,
               dispatch_override: tuple = (),
               measured_comm: bool = False,
-              use_pallas=None) -> transformer.ModelCtx:
+              use_pallas=None,
+              wire_codec="") -> transformer.ModelCtx:
     from repro.core import dispatch as dispatch_lib
+    from repro.core.dispatch import wire as wire_lib
+
+    # config-time codec validation: unknown names fail here with the
+    # registry listed, mirroring the dispatch-name check below
+    codec = wire_lib.get_codec(wire_codec)
 
     # arch-level per-layer overrides are the base; explicit (run-level)
     # overrides win per layer index.
@@ -141,14 +150,16 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
                  or any(n == "a2a_pipelined" for _, n in dispatch_override))
     if plan is not None and pipelined:
         num_chunks = resolve_num_chunks(arch, plan, ep, a2a_num_chunks,
-                                        mesh=mesh if measured_comm else None)
+                                        mesh=mesh if measured_comm else None,
+                                        wire_codec=codec)
         plan = capacity.align_to_chunks(plan, num_chunks)
     return transformer.ModelCtx(
         arch=arch, mesh=mesh, ep=ep, plan=plan, gate_cfg=gate_cfg,
         remat=remat, decode_replicated=decode_replicated,
         use_flash=use_flash, use_moe_kernel=use_moe_kernel,
         dispatch=dispatch, a2a_num_chunks=num_chunks,
-        dispatch_override=dispatch_override, use_pallas=use_pallas)
+        dispatch_override=dispatch_override, use_pallas=use_pallas,
+        wire_codec=codec)
 
 
 # ---------------------------------------------------------------------------

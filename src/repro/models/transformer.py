@@ -64,7 +64,11 @@ class ModelCtx:
     # perf flags (see EXPERIMENTS.md §Perf) — default off = paper baseline
     use_blockwise: bool = False                  # flash-style attention HLO
     fused_xent: bool = False                     # vocab-sharded xent
-    a2a_dtype: str = ""                          # quantized MoE a2a wire
+    a2a_dtype: str = ""                          # deprecated: use wire_codec
+    wire_codec: object = None                    # a2a wire codec (a
+                                                 # core.dispatch.wire codec or
+                                                 # registered name) — payload
+                                                 # encoding + scale sideband
     mamba_scan_chunk: int = 0                    # chunked selective scan
     xlstm_chunk: int = 0                         # chunkwise mLSTM
 
@@ -113,7 +117,8 @@ class ModelCtx:
             capacity_factor=a.moe.capacity_factor,
             num_shared_experts=a.moe.num_shared_experts,
             activation=a.activation, dtype=a.jnp_dtype,
-            use_kernel=self.use_moe_kernel, a2a_dtype=self.a2a_dtype)
+            use_kernel=self.use_moe_kernel, a2a_dtype=self.a2a_dtype,
+            wire_codec=self.wire_codec)
 
     @property
     def frac_levels(self) -> int:

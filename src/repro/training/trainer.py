@@ -121,7 +121,8 @@ def train(arch: ArchConfig, run: RunConfig, mesh, *, steps: int,
                               dispatch=run.dispatch,
                               a2a_num_chunks=run.a2a_num_chunks,
                               dispatch_override=run.dispatch_override,
-                              use_pallas=run.use_pallas)
+                              use_pallas=run.use_pallas,
+                              wire_codec=run.wire_codec)
     rules = model_lib.default_rules(mesh)
     key = jax.random.PRNGKey(run.seed)
     with mesh, sharding.axis_rules(rules):
