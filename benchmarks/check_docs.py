@@ -26,7 +26,7 @@ import re
 import sys
 
 DOC_FILES = ("README.md", "docs/architecture.md", "docs/serving.md",
-             "docs/analysis.md")
+             "docs/analysis.md", "docs/resilience.md")
 # trees searched for flag definitions/uses
 FLAG_TREES = ("src", "benchmarks", "examples", "tests", ".github", "results")
 PATH_SUFFIXES = (".py", ".md", ".json", ".yml", ".yaml", ".txt", ".toml")

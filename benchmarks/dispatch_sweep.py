@@ -53,6 +53,10 @@ GEMM_OCCS = (25, 50, 100)
 # loose-ish because the three compared kernels interleave differently with
 # interpreter per-step copy overhead on shared CI runners.
 FUSED_MAX_VS_UNFUSED = 1.10
+# the resilience guard (fault scalars, fused non-finite reduce, in-jit
+# select) is sold as free: the guarded train step must ride within 5% of
+# the plain step or the sweep fails rather than report
+GUARD_MAX_OVERHEAD = 1.05
 
 
 def _modes():
@@ -119,6 +123,44 @@ def run(quick: bool = False):
                            in_specs=(P(), P()), out_specs=P(),
                            check_vma=False)
         configs.append((f"a2a_wire-{codec}_pallas-auto", jax.jit(body_c)))
+
+    # train_step guard rows: one full fwd+bwd+AdamW step of the reduced
+    # MoE stack, plain vs guarded (fault scalars, fused non-finite
+    # reduce, in-jit select).  The guard is sold as free — its overhead
+    # is gated at GUARD_MAX_OVERHEAD below, and both rows land in the
+    # compare lane so the *absolute* step time is pinned too.
+    from repro.configs.base import RunConfig as _RunConfig
+    from repro.configs.base import get_config as _get_config
+    from repro.data.pipeline import (DataConfig as _DataConfig,
+                                     SyntheticLM as _SyntheticLM,
+                                     shard_batch as _shard_batch)
+    from repro.models import model as _model_lib
+    from repro.optim import adamw as _adamw
+    from repro.resilience import chaos as _chaos_lib
+    from repro.training import trainer as _trainer_lib
+    from repro import sharding as _sharding
+    g_arch = _get_config("gpt3_medium_moe").reduced()
+    g_run = _RunConfig(seq_len=32, global_batch=4, total_steps=100,
+                       warmup_steps=10, aux_mode="ta", seed=0)
+    g_ctx = _model_lib.build_ctx(g_arch, mesh, seq_len=g_run.seq_len,
+                                 global_batch=g_run.global_batch,
+                                 aux_mode="ta")
+    with mesh, _sharding.axis_rules(_model_lib.default_rules(mesh)):
+        g_params = _model_lib.init_params(jax.random.PRNGKey(2), g_ctx)
+    g_opt = _adamw.init_state(g_params)
+    g_batch = _shard_batch(_SyntheticLM(_DataConfig(
+        vocab_size=g_arch.vocab_size, seq_len=g_run.seq_len,
+        global_batch=g_run.global_batch, seed=0), g_arch).batch(0), mesh)
+    g_plain = jax.jit(_trainer_lib.make_train_step(g_ctx, g_run))
+    g_guarded = jax.jit(_trainer_lib.make_guarded_train_step(g_ctx, g_run))
+    g_scales = _chaos_lib.fault_scales(None, 0)
+    g_fault = {k: jnp.float32(g_scales[k])
+               for k in ("loss_mult", "grad_mult")}
+    configs.append(("train_step_guard-off",
+                    lambda p, xx: g_plain(g_params, g_opt, g_batch)))
+    configs.append(("train_step_guard-on",
+                    lambda p, xx: g_guarded(g_params, g_opt, g_batch,
+                                            g_fault)))
 
     # anchor rows: fixed pure-jnp workloads spelled out *here*, running no
     # repo code at all — benchmarks.compare estimates the machine-speed
@@ -306,6 +348,20 @@ def run(quick: bool = False):
                 f"25%-occupancy fused megakernel not measurably faster "
                 f"than 100% ({f25:.0f}us vs {f100:.0f}us): the fused grid "
                 "lost the slack-block skip")
+
+    # guard-overhead gate: min-over-rounds of the guarded vs plain train
+    # step.  Raising turns into a dispatch_FAILED row in run.py, which
+    # fails the compare gate.
+    tg_off = min(samples["train_step_guard-off"])
+    tg_on = min(samples["train_step_guard-on"])
+    print(f"# train-step guard overhead: {tg_on / tg_off:.3f}x "
+          f"({tg_on:.0f}us vs {tg_off:.0f}us)")
+    if tg_on > GUARD_MAX_OVERHEAD * tg_off:
+        raise RuntimeError(
+            f"guarded train step {tg_on / tg_off:.3f}x the plain step "
+            f"({tg_on:.0f}us vs {tg_off:.0f}us, gate "
+            f"{GUARD_MAX_OVERHEAD:.2f}x): the health guard is supposed "
+            "to be free")
 
     # cross-check while we are here: step-time rows are only comparable if
     # the paths still agree (guards against benchmarking a broken kernel).

@@ -3,11 +3,16 @@
 Deliberately simple and dependency-free (no orbax in the container):
 leaves are saved as numpy arrays keyed by '/'-joined pytree paths; restore
 rebuilds into an existing template (so shardings/dtypes are re-applied by
-the caller via device_put).  Atomic via write-to-temp + rename.
+the caller via device_put).  Both the payload and the ``.meta.json``
+sidecar are written atomically (temp + rename), and the meta carries a
+per-leaf sha256 manifest — ``restore`` verifies it, and ``verify`` lets
+the resilience rollback path pick the newest *uncorrupted* rolling
+checkpoint without raising.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -29,6 +34,28 @@ def _flatten(tree):
     return flat
 
 
+def _leaf_sha256(arr: np.ndarray) -> str:
+    """Content hash covering dtype and shape as well as the bytes, so a
+    silent dtype rewrite or reshape can't slip past the manifest."""
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(tuple(arr.shape)).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _write_atomic_json(path: str, obj) -> None:
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp.json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
 def save(path: str, tree, step: int | None = None):
     flat = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -41,29 +68,92 @@ def save(path: str, tree, step: int | None = None):
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
-    meta = {"step": step, "num_leaves": len(flat)}
-    with open(path + ".meta.json", "w") as f:
-        json.dump(meta, f)
+    meta = {"step": step, "num_leaves": len(flat),
+            "manifest": {k: _leaf_sha256(v) for k, v in flat.items()}}
+    _write_atomic_json(path + ".meta.json", meta)
 
 
-def restore(path: str, template):
-    """Restore into the structure of ``template`` (shapes must match)."""
+def _load_meta(path: str) -> dict | None:
+    meta = path + ".meta.json"
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f)
+
+
+def restore(path: str, template, *, check_hashes: bool = True):
+    """Restore into the structure of ``template``.
+
+    Fails loudly — every mismatch is a ``ValueError`` naming the offending
+    key: missing/extra keys, shape mismatches, dtype mismatches (no silent
+    cast), and (when a manifest sidecar exists) per-leaf sha256 mismatches
+    against what ``save`` wrote.  Checkpoints written before the manifest
+    era restore without hash verification.
+    """
     data = np.load(path)
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(template)
+    keys = {}
+    for kp, leaf in leaves:
+        keys["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp)] = leaf
+    saved = set(data.files)
+    missing = sorted(set(keys) - saved)
+    extra = sorted(saved - set(keys))
+    if missing:
+        raise ValueError(
+            f"checkpoint {path}: missing key {missing[0]!r}"
+            + (f" (+{len(missing) - 1} more)" if len(missing) > 1 else ""))
+    if extra:
+        raise ValueError(
+            f"checkpoint {path}: extra key {extra[0]!r} not in template"
+            + (f" (+{len(extra) - 1} more)" if len(extra) > 1 else ""))
+    meta = _load_meta(path) if check_hashes else None
+    manifest = (meta or {}).get("manifest")
     out = []
     for kp, leaf in leaves:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in kp)
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        out.append(arr.astype(leaf.dtype))
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"checkpoint {path}: key {key!r} has shape "
+                             f"{arr.shape}, template wants "
+                             f"{tuple(leaf.shape)}")
+        if arr.dtype != np.dtype(leaf.dtype):
+            raise ValueError(f"checkpoint {path}: key {key!r} has dtype "
+                             f"{arr.dtype}, template wants "
+                             f"{np.dtype(leaf.dtype)} (refusing to cast)")
+        if manifest is not None:
+            want = manifest.get(key)
+            if want is None or _leaf_sha256(arr) != want:
+                raise ValueError(f"checkpoint {path}: key {key!r} fails "
+                                 f"sha256 manifest verification (corrupt "
+                                 f"or stale payload)")
+        out.append(arr)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), out)
 
 
+def verify(path: str) -> bool:
+    """True when the payload at ``path`` matches its sha256 manifest.
+
+    Non-raising — any failure (unreadable payload, absent meta, key-set
+    mismatch, hash mismatch) is ``False``.  The rollback policy uses this
+    to walk rolling checkpoints newest-first and restore the first one
+    that still proves integrity.
+    """
+    try:
+        meta = _load_meta(path)
+        if meta is None or "manifest" not in meta:
+            return False
+        manifest = meta["manifest"]
+        data = np.load(path)
+        if set(data.files) != set(manifest):
+            return False
+        return all(_leaf_sha256(data[k]) == manifest[k] for k in manifest)
+    except Exception:
+        return False
+
+
 def latest_step(path: str):
-    meta = path + ".meta.json"
-    if not os.path.exists(meta):
-        return None
-    with open(meta) as f:
-        return json.load(f).get("step")
+    meta = _load_meta(path)
+    return None if meta is None else meta.get("step")

@@ -166,6 +166,11 @@ class RunConfig:
     # riding the same collective chain; "int8" additionally runs the
     # delivered rows' up-projection GEMMs in int8 (i32 accumulate).
     wire_codec: str = ""
+    # Resilient-runtime config (a repro.resilience.ResilienceConfig, or
+    # None for the classic unguarded loop).  Typed as object to keep this
+    # module import-light; trainer.train and build_ctx thread it through
+    # to the guarded step factory and the recovery policy.
+    resilience: object | None = None
     # Nested topology spec in the paper's Fig. 2 notation, e.g.
     # ((2, 2), (2, 2)) for a 3-tier pod x node x data hierarchy of 8
     # devices.  Empty = take the hierarchy from the mesh the caller built.

@@ -144,11 +144,27 @@ def stage_ratio(ratios, level_sizes, stage: int) -> float:
     return float(ratios[0]) if stage == 0 else 0.0
 
 
+def scale_comm_model(model, level_beta_scale) -> "topo_lib.CommModel":
+    """Scale a CommModel's per-level inverse bandwidths.
+
+    ``level_beta_scale[l] > 1`` marks topology level ``l`` as observed
+    slower than the model's constant (a degraded link); ``math.inf``
+    marks it unusable — its Eq. (7) ratio becomes exactly 0 (``1/inf``),
+    collapsing the level toward local dispatch with the same convention
+    :func:`stage_ratio` pins for memberless levels.  Scales shorter than
+    the level count pad with 1.0.
+    """
+    scales = tuple(float(s) for s in level_beta_scale)
+    scales = scales + (1.0,) * (len(model.beta) - len(scales))
+    beta = tuple(b * s for b, s in zip(model.beta, scales))
+    return topo_lib.CommModel(topo=model.topo, alpha=model.alpha, beta=beta)
+
+
 def make_dispatch_plan(*, tokens_per_device: int, num_experts: int,
                        top_k: int, capacity_factor: float,
                        axis_sizes, axis_names=None, mode: str = "ta",
                        hir_ratio: float = 4.0, round_multiple: int = 8,
-                       comm=None) -> DispatchPlan:
+                       comm=None, level_beta_scale=None) -> DispatchPlan:
     """Build the level-indexed capacity plan for an N-axis EP hierarchy.
 
     ``axis_sizes`` are the EP mesh extents outermost-first (e.g.
@@ -156,6 +172,9 @@ def make_dispatch_plan(*, tokens_per_device: int, num_experts: int,
     pod/node/data naming.  ``comm`` optionally supplies the per-level
     alpha-beta :class:`~repro.core.topology.CommModel` (defaults to the
     hardware-constant ladder of :func:`~repro.core.topology.tree_topology_nd`).
+    ``level_beta_scale`` applies :func:`scale_comm_model` — the
+    degraded-topology fallback re-solves the plan through it with the
+    *observed* per-level slowdowns.
 
     mode="even": uniform capacity  C = k*S*cf/N         (paper baseline)
     mode="ta"  : per-stage C_s = ratio_{s+1} * C        (Eq. 7)
@@ -174,6 +193,8 @@ def make_dispatch_plan(*, tokens_per_device: int, num_experts: int,
     c_even = assignments * capacity_factor / num_experts
 
     model = comm or topo_lib.tree_topology_nd(sizes)
+    if level_beta_scale is not None:
+        model = scale_comm_model(model, level_beta_scale)
     ratios = topo_lib.per_level_ratios(model)        # [n + 1]
     level_sizes = tuple(int(x) for x in model.topo.level_sizes(0))
 

@@ -328,6 +328,39 @@ def measured_ep_links(mesh, axis_names) -> dict:
     return links
 
 
+def scale_links(links: dict, multipliers: dict) -> dict:
+    """Apply per-axis beta multipliers to measured links.
+
+    ``multipliers[axis] > 1`` models a degraded link (chaos injection or
+    an out-of-band observation); entries absent from ``multipliers`` (and
+    None links for size-1 axes) pass through unchanged.  Sampled times
+    scale with beta so the fit stays self-consistent.
+    """
+    out = {}
+    for ax, li in links.items():
+        m = float(multipliers.get(ax, 1.0))
+        if li is None or m == 1.0:
+            out[ax] = li
+        else:
+            out[ax] = dataclasses.replace(
+                li, beta=li.beta * m,
+                times=tuple(t * m for t in li.times))
+    return out
+
+
+def link_slowdowns(links: dict, baseline: dict) -> dict:
+    """Observed per-axis beta ratio vs a baseline observation (> 1 means
+    the axis got slower).  Axes missing from either side are skipped —
+    the degraded-topology fallback only acts on levels it can compare."""
+    out = {}
+    for ax, li in links.items():
+        base = baseline.get(ax)
+        if li is None or base is None:
+            continue
+        out[ax] = li.beta / max(base.beta, 1e-30)
+    return out
+
+
 def measured_moe_links(mesh, *, data_axis: str = "data",
                        pod_axis: str | None = None) -> dict:
     """Deprecated 2-level wrapper over :func:`measured_ep_links`: measured

@@ -121,7 +121,8 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
               dispatch_override: tuple = (),
               measured_comm: bool = False,
               use_pallas=None,
-              wire_codec="") -> transformer.ModelCtx:
+              wire_codec="",
+              resilience=None) -> transformer.ModelCtx:
     from repro.core import dispatch as dispatch_lib
     from repro.core.dispatch import wire as wire_lib
 
@@ -159,7 +160,7 @@ def build_ctx(arch: ArchConfig, mesh, *, seq_len: int, global_batch: int,
         use_flash=use_flash, use_moe_kernel=use_moe_kernel,
         dispatch=dispatch, a2a_num_chunks=num_chunks,
         dispatch_override=dispatch_override, use_pallas=use_pallas,
-        wire_codec=codec)
+        wire_codec=codec, resilience=resilience)
 
 
 # ---------------------------------------------------------------------------

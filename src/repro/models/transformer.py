@@ -71,6 +71,11 @@ class ModelCtx:
                                                  # encoding + scale sideband
     mamba_scan_chunk: int = 0                    # chunked selective scan
     xlstm_chunk: int = 0                         # chunkwise mLSTM
+    resilience: object | None = None             # ResilienceConfig (guards,
+                                                 # recovery policy, chaos) —
+                                                 # carried for the guarded
+                                                 # step factory; None = the
+                                                 # classic unguarded loop
 
     @property
     def attn_cfg(self):
@@ -335,10 +340,11 @@ def _merge_specs(params, partial_specs):
 
 
 def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
-                    aux0=0.0, frac0=None, layer_idx=None):
-    """Returns (x, aux, frac): the residual stream, the accumulated aux
-    loss, and the accumulated per-level dispatch-fraction vector (``frac0``
-    passed through unchanged — possibly None — for non-MoE sublayers)."""
+                    aux0=0.0, frac0=None, drop0=None, layer_idx=None):
+    """Returns (x, aux, frac, drop): the residual stream, the accumulated
+    aux loss, the accumulated per-level dispatch-fraction vector, and the
+    accumulated dropped-token fraction (``frac0`` / ``drop0`` passed
+    through unchanged — possibly None — for non-MoE sublayers)."""
     a = ctx.arch
     h = layers.norm_apply(p["norm1"], x, a.norm)
     if sub.mixer == "attn":
@@ -362,6 +368,7 @@ def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
         x = x + mix
     aux = jnp.asarray(aux0, jnp.float32)
     frac = frac0
+    drop = drop0
     if sub.ffn == "mlp":
         h = layers.norm_apply(p["norm2"], x, a.norm)
         x = x + layers.mlp_apply(p["ffn"], h, a.activation)
@@ -373,8 +380,10 @@ def _apply_sublayer(p, x, sub: SubLayer, ctx: ModelCtx, *, enc_out=None,
         aux = aux + metrics["aux_loss"]
         if frac is not None:
             frac = frac + metrics["frac_by_level"]
+        if drop is not None:
+            drop = drop + metrics["dropped"]
     x = sharding.constrain(x, "batch", None, None)
-    return x, aux, frac
+    return x, aux, frac, drop
 
 
 def _cross_attn(p, x, enc_out, ctx: ModelCtx):
@@ -395,7 +404,7 @@ def _run_encoder(params, frames, ctx: ModelCtx):
     esub, n_enc = encoder_plan(ctx.arch)
 
     def body(x, p):
-        x, _, _ = _apply_sublayer(p["sub0"], x, esub[0], ctx)
+        x, _, _, _ = _apply_sublayer(p["sub0"], x, esub[0], ctx)
         return x, None
     x, _ = jax.lax.scan(body, frames, params["enc_groups"])
     return layers.norm_apply(params["enc_norm"], x, ctx.arch.norm)
@@ -422,9 +431,11 @@ def _overrides_hit_groups(ctx: ModelCtx, n_prefix: int, group, n_groups: int,
 def forward_features(params, batch, ctx: ModelCtx):
     """Full-sequence forward up to the final norm.
 
-    Returns ``(x, aux, frac_by_level)``: features, the mean aux loss, and
-    the mean per-level dispatch-fraction vector over the MoE layers (None
-    for models without MoE layers).
+    Returns ``(x, aux, frac_by_level, dropped)``: features, the mean aux
+    loss, the mean per-level dispatch-fraction vector over the MoE layers,
+    and the mean dropped-token fraction (the engine's uniform ``dropped``
+    metric — the step-health watermark reads it).  The latter two are None
+    for models without MoE layers.
     """
     a = ctx.arch
     prefix, group, n_groups = layer_plan(a)
@@ -444,10 +455,11 @@ def forward_features(params, batch, ctx: ModelCtx):
     aux = jnp.float32(0.0)
     n_moe = n_groups * sum(1 for s in group if s.ffn == "moe")
     frac = jnp.zeros((ctx.frac_levels,), jnp.float32) if n_moe else None
+    drop = jnp.float32(0.0) if n_moe else None
     for i, sub in enumerate(prefix):
-        x, aux, frac = _apply_sublayer(params[f"prefix{i}"], x, sub, ctx,
-                                       enc_out=enc_out, aux0=aux, frac0=frac,
-                                       layer_idx=i)
+        x, aux, frac, drop = _apply_sublayer(
+            params[f"prefix{i}"], x, sub, ctx, enc_out=enc_out, aux0=aux,
+            frac0=frac, drop0=drop, layer_idx=i)
 
     n_prefix = len(prefix)
     if _overrides_hit_groups(ctx, n_prefix, group, n_groups):
@@ -455,43 +467,44 @@ def forward_features(params, batch, ctx: ModelCtx):
         # the schedule is layer-dependent, so unroll the group loop (each
         # group gets its own HLO with its own dispatch path).
         def run_group(carry, pg, base_idx):
-            x, aux, frac = carry
+            x, aux, frac, drop = carry
             for j, sub in enumerate(group):
-                x, aux, frac = _apply_sublayer(pg[f"sub{j}"], x, sub, ctx,
-                                               enc_out=enc_out, aux0=aux,
-                                               frac0=frac,
-                                               layer_idx=base_idx + j)
-            return x, aux, frac
+                x, aux, frac, drop = _apply_sublayer(
+                    pg[f"sub{j}"], x, sub, ctx, enc_out=enc_out, aux0=aux,
+                    frac0=frac, drop0=drop, layer_idx=base_idx + j)
+            return x, aux, frac, drop
         if ctx.remat:
             run_group = jax.checkpoint(run_group, static_argnums=(2,),
                                        prevent_cse=False)
         for g in range(n_groups):
             pg = jax.tree_util.tree_map(lambda a, g=g: a[g], params["groups"])
-            x, aux, frac = run_group((x, aux, frac), pg,
-                                     n_prefix + g * len(group))
+            x, aux, frac, drop = run_group((x, aux, frac, drop), pg,
+                                           n_prefix + g * len(group))
     else:
         def body(carry, p):
-            x, aux, frac = carry
+            x, aux, frac, drop = carry
             for j, sub in enumerate(group):
-                x, aux, frac = _apply_sublayer(p[f"sub{j}"], x, sub, ctx,
-                                               enc_out=enc_out, aux0=aux,
-                                               frac0=frac)
-            return (x, aux, frac), None
+                x, aux, frac, drop = _apply_sublayer(
+                    p[f"sub{j}"], x, sub, ctx, enc_out=enc_out, aux0=aux,
+                    frac0=frac, drop0=drop)
+            return (x, aux, frac, drop), None
 
         if ctx.remat:
             body = jax.checkpoint(body, prevent_cse=False)
-        (x, aux, frac), _ = jax.lax.scan(body, (x, aux, frac),
-                                         params["groups"])
+        (x, aux, frac, drop), _ = jax.lax.scan(body, (x, aux, frac, drop),
+                                               params["groups"])
 
     x = layers.norm_apply(params["final_norm"], x, a.norm)
     if frac is not None:
         frac = frac / max(1, n_moe)
-    return x, aux / max(1, n_groups * len(group)), frac
+    if drop is not None:
+        drop = drop / max(1, n_moe)
+    return x, aux / max(1, n_groups * len(group)), frac, drop
 
 
 def forward(params, batch, ctx: ModelCtx):
     """Full-sequence forward (train / prefill). Returns (logits, aux)."""
-    x, aux, _ = forward_features(params, batch, ctx)
+    x, aux, _, _ = forward_features(params, batch, ctx)
     logits = layers.unembed_apply(params["embed"], x)
     logits = sharding.constrain(logits, "batch", None, "model")
     return logits, aux
@@ -521,7 +534,7 @@ def _fused_xent(params, x, labels, ctx: ModelCtx):
 
 def loss_fn(params, batch, ctx: ModelCtx, aux_weight: float = 1.0):
     labels = batch["labels"]
-    x, aux, frac = forward_features(params, batch, ctx)
+    x, aux, frac, drop = forward_features(params, batch, ctx)
     if ctx.fused_xent:
         nll = _fused_xent(params, x, labels, ctx)
     else:
@@ -537,4 +550,9 @@ def loss_fn(params, batch, ctx: ModelCtx, aux_weight: float = 1.0):
         # mean per-level dispatch fractions over the MoE layers — the
         # level-indexed replacement for the old frac_near/frac_far pair
         metrics["frac_by_level"] = frac
+    if drop is not None:
+        # mean dropped-assignment fraction over the MoE layers (the
+        # engine's uniform `dropped` metric) — feeds the step-health
+        # dropped-token watermark
+        metrics["dropped"] = drop
     return total, metrics

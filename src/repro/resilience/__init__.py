@@ -1,0 +1,11 @@
+"""Resilient training runtime: chaos fault injection, step-health guards,
+and the recovery policy (skip / rollback / degraded-topology replan).
+
+See docs/resilience.md for guard semantics, the recovery state machine,
+and the chaos scenario catalog.
+"""
+
+from repro.resilience.chaos import ChaosConfig
+from repro.resilience.policy import RecoveryPolicy, ResilienceConfig
+
+__all__ = ["ChaosConfig", "RecoveryPolicy", "ResilienceConfig"]

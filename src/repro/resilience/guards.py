@@ -1,0 +1,90 @@
+"""In-step health checks: the fused non-finite reduce (traced, runs inside
+the jitted step) and the host-side detectors (EMA loss-spike, dropped-token
+watermark) the recovery policy consumes.
+
+Model-free on purpose — this module imports only jax, so the config layer
+and the policy can depend on it without touching the model stack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nonfinite_score(loss, grads):
+    """One fused tree-reduce whose finiteness answers for loss + grads.
+
+    ``sum(g * 0)`` is exactly 0.0 for an all-finite leaf and NaN when any
+    element is NaN or inf (``0 * inf = nan``), so chaining the per-leaf
+    reduces into one scalar add tree gives a single health flag without a
+    second pass over the gradients.  Returns the scalar; callers test
+    ``jnp.isfinite`` on it.
+    """
+    z = (loss * 0.0).astype(jnp.float32)
+    for g in jax.tree_util.tree_leaves(grads):
+        z = z + jnp.sum(g * 0).astype(jnp.float32)
+    return z
+
+
+class SpikeDetector:
+    """EMA loss-spike detector: sustained ``loss > factor * ema`` trips it.
+
+    The EMA only absorbs *non-spiking* finite losses (a spike must not
+    poison its own baseline), and the first ``warmup`` updates never trip
+    (the EMA needs a few steps to mean anything).  ``update`` returns True
+    when ``patience`` consecutive spiking steps have been seen; ``reset``
+    (called after a rollback) clears the streak but keeps the healthy EMA.
+    """
+
+    def __init__(self, factor: float = 3.0, patience: int = 2,
+                 beta: float = 0.9, warmup: int = 5):
+        self.factor = factor
+        self.patience = patience
+        self.beta = beta
+        self.warmup = warmup
+        self.ema = None
+        self.n = 0
+        self.streak = 0
+
+    def update(self, loss: float) -> bool:
+        import math
+        if not math.isfinite(loss):
+            return False            # the non-finite guard owns this case
+        if self.ema is None:
+            self.ema = loss
+        if self.n >= self.warmup and loss > self.factor * self.ema:
+            self.streak += 1
+        else:
+            self.streak = 0
+            self.ema = self.beta * self.ema + (1 - self.beta) * loss
+        self.n += 1
+        return self.streak >= self.patience
+
+    def reset(self) -> None:
+        self.streak = 0
+
+
+class DropWatermark:
+    """Sustained-breach watermark on the dispatch ``dropped`` metric (the
+    fraction of routed assignments the static capacities discarded).
+    ``update`` returns True once ``patience`` consecutive observations
+    exceed ``watermark``; ``watermark >= 1.0`` disables the check
+    (``dropped`` lives in [0, 1])."""
+
+    def __init__(self, watermark: float = 1.0, patience: int = 3):
+        self.watermark = watermark
+        self.patience = patience
+        self.streak = 0
+
+    def update(self, dropped: float | None) -> bool:
+        if dropped is None or self.watermark >= 1.0:
+            return False
+        if dropped > self.watermark:
+            self.streak += 1
+        else:
+            self.streak = 0
+        if self.streak >= self.patience:
+            self.streak = 0         # re-arm: one alarm per sustained breach
+            return True
+        return False

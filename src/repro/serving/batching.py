@@ -10,6 +10,8 @@ out of bounds, so JAX scatter semantics drop them on insert.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -84,8 +86,12 @@ class SlotKVCache:
             from jax.sharding import NamedSharding, PartitionSpec
             repl = NamedSharding(ctx.mesh, PartitionSpec())
             self.cache = jax.device_put(self.cache, repl)
-        self._insert = jax.jit(decode_lib.cache_insert_slots)
-        self._evict = jax.jit(decode_lib.cache_evict_slots)
+        # wrap in partials so each instance gets a private tracing cache:
+        # jax.jit shares its cache across wrappers of the same callable, so
+        # another engine's differently-shaped cache would otherwise leak
+        # into this instance's cache stats
+        self._insert = jax.jit(functools.partial(decode_lib.cache_insert_slots))
+        self._evict = jax.jit(functools.partial(decode_lib.cache_evict_slots))
 
     def insert(self, src_cache, slot_ids) -> None:
         """Write a prefilled pack cache into ``slot_ids`` (out-of-range ids

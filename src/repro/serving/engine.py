@@ -209,6 +209,8 @@ class ServingReport:
     total_new_tokens: int
     decode_steps: int
     prefill_calls: int
+    evictions: int = 0             # deadline-evicted streams (partial
+                                   # outputs stay on `streams`, flagged)
 
     @property
     def tokens_per_sec(self) -> float:
@@ -293,12 +295,23 @@ class ServingEngine:
         cur = jnp.zeros((cfg.num_slots, 1), jnp.int32)
         temps = np.zeros((cfg.num_slots,), np.float32)
         key = jax.random.PRNGKey(seed)
-        decode_steps = prefill_calls = 0
+        decode_steps = prefill_calls = evictions = 0
         t0 = time.time()
         while sched.has_work:
             cur, key, n_pre = self._admit(sched, kv, cur, temps, key,
                                           now=time.time())
             prefill_calls += n_pre
+            # deadline sweep: evict overdue streams mid-decode — their KV
+            # rows are zeroed and the freed slots return to the pool for
+            # the next admission round (one stuck stream can't wedge the
+            # engine)
+            now = time.time()
+            overdue = sched.expired(now)
+            if overdue:
+                kv.evict(overdue)
+                for slot in overdue:
+                    sched.evict(slot, now=now)
+                evictions += len(overdue)
             if not sched.num_active:
                 continue        # everything admitted finished at 1 token
             logits, kv.cache = self._decode(self.params, kv.cache, cur)
@@ -315,7 +328,8 @@ class ServingEngine:
         return ServingReport(streams=sched.finished, wall_time=wall,
                              total_new_tokens=total,
                              decode_steps=decode_steps,
-                             prefill_calls=prefill_calls)
+                             prefill_calls=prefill_calls,
+                             evictions=evictions)
 
 
 __all__ = ["GenerationResult", "Request", "ServeConfig", "ServingEngine",

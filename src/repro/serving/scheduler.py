@@ -25,12 +25,16 @@ class Request:
     stream's length budget; ``temperature`` 0 means greedy.  ``frontend``
     optionally carries a per-request modality array (vision patches for the
     vlm family), spliced over the leading prompt positions at prefill.
+    ``deadline_s`` is a wall-clock budget measured from admission — a
+    stream past it is evicted mid-decode (partial output kept, slot freed)
+    so one stuck stream can't wedge the engine; None means no deadline.
     """
     uid: int
     tokens: object
     max_new_tokens: int
     temperature: float = 0.0
     frontend: object | None = None
+    deadline_s: float | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -45,6 +49,7 @@ class Stream:
     generated: list = dataclasses.field(default_factory=list)
     t_admitted: float = 0.0
     t_finished: float = 0.0
+    evicted: bool = False            # deadline eviction (partial output)
 
     @property
     def done(self) -> bool:
@@ -134,6 +139,27 @@ class Scheduler:
         """Evict the stream in ``slot``, free the slot for reuse, and
         return the finished stream."""
         stream = self._active.pop(slot)
+        stream.t_finished = now if now is not None else time.time()
+        heapq.heappush(self._free, slot)
+        self.finished.append(stream)
+        return stream
+
+    # -- deadlines -----------------------------------------------------------
+
+    def expired(self, now: float) -> list:
+        """Active slots whose stream has outlived its request deadline
+        (``deadline_s`` from admission; None = never expires)."""
+        return sorted(
+            slot for slot, s in self._active.items()
+            if s.request.deadline_s is not None
+            and now - s.t_admitted >= s.request.deadline_s)
+
+    def evict(self, slot: int, now: float | None = None) -> Stream:
+        """Deadline-evict the stream in ``slot``: the partial output is
+        kept on the finished list (``evicted`` flag set) and the slot
+        returns to the free pool — the caller zeroes the slot's KV rows."""
+        stream = self._active.pop(slot)
+        stream.evicted = True
         stream.t_finished = now if now is not None else time.time()
         heapq.heappush(self._free, slot)
         self.finished.append(stream)

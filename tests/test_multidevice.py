@@ -419,3 +419,36 @@ def test_fused_local_path_across_ranks_with_kernels_on():
         print("FUSED-MULTIRANK-OK")
     """)
     assert "FUSED-MULTIRANK-OK" in out
+
+
+@pytest.mark.slow
+def test_degraded_link_replan_flips_dispatch_local_heavy():
+    """Resilience chaos: a 64x beta degradation on the pod axis from step 2
+    must make the recovery policy re-solve the Eq. (7) plan at the next
+    replan boundary with the cross-pod level collapsed to 0 capacity
+    (local-heavy dispatch), and training must continue with finite loss."""
+    out = _run(4, """
+        import math
+        from repro.configs.base import get_config, RunConfig
+        from repro.compat import make_mesh
+        from repro.training import trainer
+        from repro.resilience import ChaosConfig, ResilienceConfig
+
+        arch = get_config("gpt3_medium_moe").reduced()
+        mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
+        run = RunConfig(seq_len=32, global_batch=4, total_steps=8,
+                        warmup_steps=2, aux_mode="ta", seed=0,
+                        resilience=ResilienceConfig(
+                            replan_every=4, degrade_threshold=4.0,
+                            collapse_slowdown=64.0,
+                            chaos=ChaosConfig(
+                                degraded_links=((2, "pod", 64.0),))))
+        r = trainer.train(arch, run, mesh, steps=8, log_every=1,
+                          verbose=True)
+        assert r.replans == 1, r.replans
+        assert all(math.isfinite(l) for l in r.losses), r.losses
+        assert r.metrics_history[-1]["replans"] == 1
+        print("REPLAN-OK")
+    """)
+    assert "REPLAN-OK" in out
+    assert "replan: caps -> (64, 0)" in out    # cross-pod level collapsed

@@ -1,0 +1,327 @@
+"""Resilient training runtime: chaos injection, step-health guards,
+checkpoint rollback, degraded-topology replan, and deadline eviction.
+
+Every fault family ``ChaosConfig`` can inject has a test here proving the
+run survives it; the no-chaos guarded path is additionally pinned to be
+bit-identical in trained params to the unguarded loop (the whole point of
+the in-jit select design).  The multi-axis degraded-link replan lives in
+``test_multidevice.py`` (it needs forced host devices).
+"""
+
+import dataclasses
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding
+from repro.checkpoint import ckpt
+from repro.configs.base import RunConfig, get_config
+from repro.models import model as model_lib
+from repro.resilience import ChaosConfig, RecoveryPolicy, ResilienceConfig
+from repro.resilience import chaos as chaos_lib
+from repro.resilience import guards
+from repro.serving import engine
+from repro.serving.scheduler import Request
+from repro.training import trainer
+
+ARCH_ID = "gpt3_medium_moe"
+
+
+def _run_cfg(**kw):
+    base = dict(seq_len=32, global_batch=4, total_steps=10, warmup_steps=2,
+                aux_mode="ta", seed=0)
+    base.update(kw)
+    return RunConfig(**base)
+
+
+def _train(mesh11, run, steps, **kw):
+    arch = get_config(ARCH_ID).reduced()
+    return trainer.train(arch, run, mesh11, steps=steps, log_every=1,
+                         verbose=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# guards (pure units, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_score_flags_any_poisoned_leaf():
+    grads = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
+    assert bool(jnp.isfinite(guards.nonfinite_score(jnp.float32(1.0), grads)))
+    for poison in (jnp.nan, jnp.inf, -jnp.inf):
+        bad = {"a": jnp.ones((3,)).at[1].set(poison), "b": grads["b"]}
+        score = guards.nonfinite_score(jnp.float32(1.0), bad)
+        assert not bool(jnp.isfinite(score))
+    # non-finite loss alone also trips it
+    score = guards.nonfinite_score(jnp.float32(jnp.nan), grads)
+    assert not bool(jnp.isfinite(score))
+
+
+def test_spike_detector_warmup_patience_and_baseline_protection():
+    det = guards.SpikeDetector(factor=2.0, patience=2, beta=0.5, warmup=2)
+    assert not det.update(1.0) and not det.update(1.0)   # warmup absorbs
+    ema_before = det.ema
+    assert not det.update(10.0)       # spike 1/2: streak, EMA untouched
+    assert det.ema == ema_before      # a spike must not poison its baseline
+    assert det.update(10.0)           # spike 2/2: sustained -> trip
+    det.reset()
+    assert det.streak == 0 and det.ema == ema_before
+    assert not det.update(math.nan)   # non-finite is the other guard's job
+    # within warmup, even a clear spike never trips
+    early = guards.SpikeDetector(factor=2.0, patience=1, beta=0.5, warmup=3)
+    early.update(1.0)
+    early.update(1.0)
+    assert not early.update(50.0)     # n=2 < warmup=3
+
+
+def test_drop_watermark_rearm_and_disable():
+    wm = guards.DropWatermark(watermark=0.5, patience=2)
+    assert not wm.update(0.6)
+    assert wm.update(0.6)             # sustained breach -> one alarm
+    assert not wm.update(0.6)         # re-armed: streak restarts
+    assert guards.DropWatermark(watermark=1.0).update(0.99) is False
+    assert guards.DropWatermark(watermark=0.5).update(None) is False
+
+
+def test_chaos_schedules_are_pure_and_deterministic():
+    cfg = ChaosConfig(seed=7, nan_grad_steps=(3,), nan_loss_steps=(4,),
+                      spike_steps=(5,), degraded_links=((2, "pod", 8.0),
+                                                        (6, "pod", 2.0)))
+    healthy = chaos_lib.fault_scales(cfg, 0)
+    assert healthy == {"loss_mult": 1.0, "grad_mult": 1.0, "param_scale": 1.0}
+    assert math.isnan(chaos_lib.fault_scales(cfg, 3)["grad_mult"])
+    assert math.isnan(chaos_lib.fault_scales(cfg, 4)["loss_mult"])
+    assert chaos_lib.fault_scales(cfg, 5)["param_scale"] == cfg.spike_scale
+    # degradations persist and compound from their step onward
+    assert chaos_lib.link_multipliers(cfg, 1) == {}
+    assert chaos_lib.link_multipliers(cfg, 2) == {"pod": 8.0}
+    assert chaos_lib.link_multipliers(cfg, 6) == {"pod": 16.0}
+    assert chaos_lib.fault_scales(None, 3)["grad_mult"] == 1.0
+
+
+def test_corrupt_checkpoint_is_seeded(tmp_path):
+    a, b = str(tmp_path / "a.bin"), str(tmp_path / "b.bin")
+    payload = bytes(range(256)) * 8
+    for p in (a, b):
+        with open(p, "wb") as f:
+            f.write(payload)
+        chaos_lib.corrupt_checkpoint(p, seed=3)
+    out_a, out_b = open(a, "rb").read(), open(b, "rb").read()
+    assert out_a == out_b             # same seed -> identical flips
+    assert out_a != payload
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (satellite: loud restore + manifest)
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.ones((4,), np.int32)}
+
+
+def test_ckpt_roundtrip_and_latest_step(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt.save(path, _tree(), step=11)
+    out = ckpt.restore(path, _tree())
+    assert np.array_equal(out["w"], _tree()["w"])
+    assert ckpt.latest_step(path) == 11
+    assert ckpt.verify(path)
+
+
+def test_ckpt_restore_names_missing_and_extra_keys(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt.save(path, {"w": _tree()["w"]})
+    with pytest.raises(ValueError, match="missing key 'b'"):
+        ckpt.restore(path, _tree())
+    ckpt.save(path, _tree())
+    with pytest.raises(ValueError, match="extra key 'b'"):
+        ckpt.restore(path, {"w": _tree()["w"]})
+
+
+def test_ckpt_restore_refuses_shape_and_dtype_drift(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt.save(path, _tree())
+    bad_shape = {"w": np.zeros((3, 2), np.float32), "b": _tree()["b"]}
+    with pytest.raises(ValueError, match="key 'w' has shape"):
+        ckpt.restore(path, bad_shape)
+    bad_dtype = {"w": _tree()["w"], "b": np.ones((4,), np.float32)}
+    with pytest.raises(ValueError, match="refusing to cast"):
+        ckpt.restore(path, bad_dtype)
+
+
+def test_ckpt_manifest_catches_corruption(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt.save(path, _tree())
+    chaos_lib.corrupt_checkpoint(path, seed=0)
+    assert not ckpt.verify(path)
+    with pytest.raises(Exception):    # manifest ValueError or a broken zip
+        ckpt.restore(path, _tree())
+
+
+def test_ckpt_pre_manifest_checkpoints_still_restore(tmp_path):
+    path = str(tmp_path / "t.npz")
+    ckpt.save(path, _tree())
+    os.unlink(path + ".meta.json")    # pre-manifest era: no sidecar
+    out = ckpt.restore(path, _tree())
+    assert np.array_equal(out["b"], _tree()["b"])
+    assert not ckpt.verify(path)      # but verify() refuses to vouch for it
+
+
+# ---------------------------------------------------------------------------
+# guarded training loop (chaos scenarios end to end)
+# ---------------------------------------------------------------------------
+
+
+def test_guards_on_no_chaos_is_bit_identical(mesh11):
+    """The guarded step with no fault firing must train bit-identically to
+    the plain loop: fault multipliers of 1.0 are IEEE-exact and the healthy
+    path runs no extra per-leaf work."""
+    plain = _train(mesh11, _run_cfg(), steps=4)
+    guarded = _train(mesh11, _run_cfg(resilience=ResilienceConfig()), steps=4)
+    for a, b in zip(jax.tree_util.tree_leaves(plain.params),
+                    jax.tree_util.tree_leaves(guarded.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert guarded.skipped_steps == 0 and guarded.rollbacks == 0
+    assert guarded.metrics_history[-1]["skipped_steps"] == 0
+
+
+def test_nan_grad_step_is_skipped_and_run_survives(mesh11):
+    res = ResilienceConfig(chaos=ChaosConfig(nan_grad_steps=(2,),
+                                             nan_loss_steps=(4,)))
+    r = _train(mesh11, _run_cfg(resilience=res), steps=7)
+    assert r.skipped_steps == 2       # one grad fault + one loss fault
+    assert math.isfinite(r.losses[-1])
+    for leaf in jax.tree_util.tree_leaves(r.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert r.metrics_history[-1]["skipped_steps"] == 2
+
+
+def test_spike_rollback_restores_exact_pre_spike_params(mesh11, tmp_path):
+    """Param corruption at step 6 spikes the loss; patience-2 detection
+    rolls back at step 8 — the final step — so the returned params must be
+    bitwise the step-5 rolling checkpoint."""
+    ck = str(tmp_path / "ck.npz")
+    res = ResilienceConfig(rollback_on_spike=True, spike_factor=1.5,
+                           spike_patience=2, spike_warmup=3,
+                           chaos=ChaosConfig(spike_steps=(6,)))
+    r = _train(mesh11, _run_cfg(resilience=res), steps=9,
+               ckpt_path=ck, ckpt_every=2, ckpt_keep=3)
+    assert r.rollbacks == 1
+    assert max(r.losses[7:9]) > 1.5 * r.losses[5]    # the spike was real
+    good = ckpt.restore(str(tmp_path / "ck-000005.npz"),
+                        {"params": r.params, "opt": r.opt_state})
+    for a, b in zip(jax.tree_util.tree_leaves(r.params),
+                    jax.tree_util.tree_leaves(good["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_rolling_ckpt_falls_back_to_previous(mesh11, tmp_path):
+    """The newest rolling checkpoint (step 5) is byte-corrupted right after
+    its save; the rollback must detect it via the sha256 manifest and
+    restore the step-3 checkpoint instead."""
+    ck = str(tmp_path / "ck.npz")
+    res = ResilienceConfig(rollback_on_spike=True, spike_factor=1.5,
+                           spike_patience=2, spike_warmup=3,
+                           chaos=ChaosConfig(spike_steps=(6,),
+                                             corrupt_ckpt_steps=(5,)))
+    r = _train(mesh11, _run_cfg(resilience=res), steps=9,
+               ckpt_path=ck, ckpt_every=2, ckpt_keep=3)
+    assert r.rollbacks == 1
+    assert not ckpt.verify(str(tmp_path / "ck-000005.npz"))
+    good = ckpt.restore(str(tmp_path / "ck-000003.npz"),
+                        {"params": r.params, "opt": r.opt_state})
+    for a, b in zip(jax.tree_util.tree_leaves(r.params),
+                    jax.tree_util.tree_leaves(good["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollback_without_rolling_ckpts_is_rejected(mesh11):
+    res = ResilienceConfig(rollback_on_spike=True)
+    with pytest.raises(ValueError, match="rollback_on_spike"):
+        _train(mesh11, _run_cfg(resilience=res), steps=2)
+
+
+def test_straggler_delay_does_not_change_results(mesh11):
+    res = ResilienceConfig(chaos=ChaosConfig(straggler_steps=(1, 2),
+                                             straggler_delay_s=0.01))
+    slow = _train(mesh11, _run_cfg(resilience=res), steps=4)
+    fast = _train(mesh11, _run_cfg(resilience=ResilienceConfig()), steps=4)
+    assert slow.losses == fast.losses  # a stuck rank slows, never diverges
+
+
+# ---------------------------------------------------------------------------
+# serving: per-request deadlines with mid-decode eviction
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_evicted_stream_frees_slot_for_waiters(mesh11, key):
+    arch = dataclasses.replace(get_config(ARCH_ID).reduced(),
+                               dtype="float32")
+    ctx = model_lib.build_ctx(arch, mesh11, seq_len=32, global_batch=4,
+                              aux_mode="none")
+    with mesh11, sharding.axis_rules(model_lib.default_rules(mesh11)):
+        params = model_lib.init_params(key, ctx)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, arch.vocab_size, size=5).tolist()
+               for _ in range(3)]
+    cfg = engine.ServeConfig(num_slots=2, cache_len=24, prefill_pack=2,
+                             prompt_buckets=(16,))
+    reqs = [Request(uid=0, tokens=prompts[0], max_new_tokens=15,
+                    deadline_s=0.0),
+            Request(uid=1, tokens=prompts[1], max_new_tokens=3),
+            Request(uid=2, tokens=prompts[2], max_new_tokens=3)]
+    with mesh11:
+        eng = engine.ServingEngine(params, ctx, cfg)
+        report = eng.run(reqs)
+    assert report.evictions == 1
+    evicted = [s for s in report.streams if s.evicted]
+    assert [s.request.uid for s in evicted] == [0]
+    assert len(evicted[0].generated) < 15     # partial output kept
+    for uid in (1, 2):                        # waiters got the freed slot
+        assert len(report.tokens_for(uid)) == 3
+
+
+def test_no_deadline_means_no_eviction(mesh11, key):
+    arch = dataclasses.replace(get_config(ARCH_ID).reduced(),
+                               dtype="float32")
+    ctx = model_lib.build_ctx(arch, mesh11, seq_len=32, global_batch=4,
+                              aux_mode="none")
+    with mesh11, sharding.axis_rules(model_lib.default_rules(mesh11)):
+        params = model_lib.init_params(key, ctx)
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, arch.vocab_size, size=4).tolist(),
+                    max_new_tokens=3)
+            for i in range(2)]
+    cfg = engine.ServeConfig(num_slots=2, cache_len=24, prefill_pack=2,
+                             prompt_buckets=(16,))
+    with mesh11:
+        report = engine.ServingEngine(params, ctx, cfg).run(reqs)
+    assert report.evictions == 0
+    assert all(not s.evicted for s in report.streams)
+
+
+# ---------------------------------------------------------------------------
+# policy units
+# ---------------------------------------------------------------------------
+
+
+def test_policy_classify_precedence_and_counters():
+    pol = RecoveryPolicy(ResilienceConfig(rollback_on_spike=True,
+                                          spike_factor=2.0, spike_patience=1,
+                                          spike_warmup=0))
+    assert pol.classify(0, {"nonfinite": 0.0, "loss": 1.0}) == "ok"
+    assert pol.classify(1, {"nonfinite": 1.0, "loss": 1.0}) == "skip"
+    assert pol.classify(2, {"nonfinite": 0.0, "loss": math.nan}) == "skip"
+    assert pol.healthy
+    assert pol.classify(3, {"nonfinite": 0.0, "loss": 50.0}) == "rollback"
+    pol.on_rollback()
+    assert pol.healthy
+    assert pol.counters() == {"skipped_steps": 2, "rollbacks": 1,
+                              "replans": 0, "drop_alarms": 0}

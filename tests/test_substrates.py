@@ -116,7 +116,7 @@ class TestCheckpoint:
     def test_shape_mismatch_raises(self, tmp_path):
         path = str(tmp_path / "ck.npz")
         ckpt.save(path, {"a": jnp.zeros((2,))})
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="key 'a' has shape"):
             ckpt.restore(path, {"a": jnp.zeros((3,))})
 
 
